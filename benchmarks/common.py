@@ -1,0 +1,35 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def timeit(fn, *args, repeat: int = 5, warmup: int = 1, **kw) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def load_agent():
+    """The trained RESPECT agent if present, else fresh weights."""
+    from repro.core import RespectScheduler
+    path = Path("artifacts/respect_agent.npz")
+    if path.exists():
+        return RespectScheduler.load(path), True
+    return RespectScheduler.init(seed=0), False

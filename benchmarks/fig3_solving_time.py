@@ -1,0 +1,39 @@
+"""Fig. 3: schedule SOLVING time across the ten models.
+
+Compares RESPECT inference (PtrNet decode + rho + repair) against the exact
+solver and the compiler-heuristic emulation.  The paper's 24-683x speedups
+are measured against Google's closed-source compiler binary (which does far
+more than partitioning) and CPLEX; here all three run in-process, so the
+meaningful reproduction is the TREND: RL solving time grows ~linearly in
+|V| while the exact solver grows ~quadratically (x stages), diverging on
+the big graphs.
+"""
+
+import time
+
+from repro.core import (EDGETPU, build_model_graph, MODEL_SPECS,
+                        compiler_partition, exact_bb, exact_dp)
+
+from .common import emit, load_agent, timeit
+
+
+def run(stages: int = 6):
+    sched, trained = load_agent()
+    sys_ = EDGETPU.with_stages(stages)
+    lines = []
+    for name in MODEL_SPECS:
+        g = build_model_graph(name)
+        # warm the per-size jit cache once, then measure pure solve time
+        sched.schedule(g, stages, sys_)
+        us_rl = timeit(lambda: sched.schedule(g, stages, sys_), repeat=3)
+        us_dp = timeit(lambda: exact_dp(g, stages, sys_), repeat=3)
+        t0 = time.perf_counter()
+        exact_bb(g, stages, sys_, time_budget_s=10.0)
+        us_bb = (time.perf_counter() - t0) * 1e6
+        us_comp = timeit(lambda: compiler_partition(g, stages, sys_), repeat=3)
+        lines.append(emit(
+            f"fig3/{name}", us_rl,
+            f"V={g.n};exact_dp_us={us_dp:.0f};exact_bb_us={us_bb:.0f};"
+            f"compiler_us={us_comp:.0f};speedup_vs_exact={us_bb/us_rl:.1f}x;"
+            f"trained_agent={trained}"))
+    return lines

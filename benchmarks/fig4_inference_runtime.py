@@ -1,0 +1,43 @@
+"""Fig. 4: simulated pipelined Edge TPU inference runtime, normalized to the
+commercial-compiler emulation (baseline = 1), for 4-, 5- and 6-stage systems
+across the ten ImageNet models.  The paper's physical boards are replaced by
+the calibrated Coral cost model (DESIGN.md §3) — directions to check: RL
+consistently >= compiler, RL ~= exact, and the gap growing with stage count.
+"""
+
+import numpy as np
+
+from repro.core import (EDGETPU, MODEL_SPECS, build_model_graph,
+                        compiler_partition, evaluate_schedule, exact_dp,
+                        validate_monotone)
+
+from .common import emit, load_agent, timeit
+
+
+def run():
+    sched, trained = load_agent()
+    lines = []
+    per_stage_speedups = {4: [], 5: [], 6: []}
+    for name in MODEL_SPECS:
+        g = build_model_graph(name)
+        for k in (4, 5, 6):
+            sys_ = EDGETPU.with_stages(k)
+            ev_c = evaluate_schedule(g, compiler_partition(g, k, sys_), sys_)
+            a_e, _ = exact_dp(g, k, sys_)
+            ev_e = evaluate_schedule(g, a_e, sys_)
+            res = sched.schedule(g, k, sys_)
+            assert validate_monotone(g, res.assignment, k)
+            ev_r = evaluate_schedule(g, res.assignment, sys_)
+            base = ev_c.bottleneck_s
+            sp = base / ev_r.bottleneck_s
+            per_stage_speedups[k].append(sp)
+            us = ev_r.bottleneck_s * 1e6     # simulated per-inference time
+            lines.append(emit(
+                f"fig4/{name}/k{k}", us,
+                f"norm_compiler=1.0;norm_exact={ev_e.bottleneck_s/base:.3f};"
+                f"norm_respect={ev_r.bottleneck_s/base:.3f};"
+                f"rl_speedup={sp:.2f}x;trained_agent={trained}"))
+    for k, sps in per_stage_speedups.items():
+        lines.append(emit(f"fig4/mean_speedup/k{k}", 0.0,
+                          f"mean={np.mean(sps):.3f}x;max={np.max(sps):.2f}x"))
+    return lines

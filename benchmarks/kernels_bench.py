@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks (CPU wall-time is NOT the TPU target metric —
+these verify the fallbacks run and report achieved CPU GFLOP/s + algorithmic
+FLOPs for the roofline cross-check; interpret-mode Pallas timing is included
+to document the correctness path's cost)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ptrnet
+from repro.kernels.flash.ops import flash_attention
+from repro.kernels.ptr.ops import pointer_step, precompute_refs
+from repro.kernels.ssd.ops import ssd_scan
+
+from .common import emit, timeit
+
+
+def run():
+    lines = []
+    rng = np.random.default_rng(0)
+
+    # flash attention fwd (chunked fallback), prefill-ish shape
+    b, h, s, d = 1, 8, 2048, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    fa = jax.jit(lambda q: flash_attention(q, q, q, causal=True,
+                                           impl="chunked"))
+    fa(q).block_until_ready()
+    us = timeit(lambda: fa(q).block_until_ready(), repeat=3)
+    flops = 4 * b * h * s * s * d / 2
+    lines.append(emit("kernels/flash_fwd_2k", us,
+                      f"gflops={flops/us*1e-3:.2f};algorithmic_flops={flops:.3g}"))
+
+    # flash attention fwd+bwd
+    grad = jax.jit(jax.grad(lambda q: (flash_attention(
+        q, q, q, causal=True, impl="chunked").astype(jnp.float32) ** 2).sum()))
+    grad(q).block_until_ready()
+    us = timeit(lambda: grad(q).block_until_ready(), repeat=3)
+    lines.append(emit("kernels/flash_fwdbwd_2k", us,
+                      f"gflops={3.5*flops/us*1e-3:.2f}"))
+
+    # ptr decode step at InceptionResNetv2 scale
+    params = ptrnet.init_params(jax.random.PRNGKey(0), 15, 256)
+    n = 782
+    C = jax.random.normal(jax.random.PRNGKey(1), (1, n, 256))
+    hq = jax.random.normal(jax.random.PRNGKey(2), (1, 256))
+    mask = jnp.ones((1, n), bool)
+    CWg, CWp = precompute_refs(params, C)
+    step_ref = jax.jit(lambda *a: pointer_step(params, *a, impl="ref"))
+    step_ref(C, CWg, CWp, hq, mask).block_until_ready()
+    us = timeit(lambda: step_ref(C, CWg, CWp, hq, mask).block_until_ready(),
+                repeat=5)
+    lines.append(emit("kernels/ptr_step_n782", us,
+                      f"per_graph_decode_ms={us*n/1e3:.1f}"))
+
+    # ssd scan, zamba2-ish head shape
+    bt, ss, hh, p, g, nn = 1, 1024, 8, 64, 2, 64
+    x = jnp.asarray(rng.normal(size=(bt, ss, hh, p)), jnp.bfloat16)
+    dt = jnp.asarray(np.abs(rng.normal(size=(bt, ss, hh))) * 0.1, jnp.float32)
+    A = jnp.asarray(np.abs(rng.normal(size=(hh,))) + 0.5, jnp.float32)
+    B = jnp.asarray(rng.normal(size=(bt, ss, g, nn)), jnp.bfloat16)
+    Cm = jnp.asarray(rng.normal(size=(bt, ss, g, nn)), jnp.bfloat16)
+    scan = jax.jit(lambda *a: ssd_scan(*a, chunk=64, impl="chunked")[0])
+    scan(x, dt, A, B, Cm).block_until_ready()
+    us = timeit(lambda: scan(x, dt, A, B, Cm).block_until_ready(), repeat=3)
+    sflops = bt * hh * (2 * ss * 64 * nn + 2 * ss * 64 * p) * 2
+    lines.append(emit("kernels/ssd_scan_1k", us,
+                      f"gflops={sflops/us*1e-3:.2f}"))
+
+    # interpret-mode pallas (correctness path) — small shape
+    qs = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    us = timeit(lambda: flash_attention(qs, qs, qs, causal=True,
+                                        impl="interpret").block_until_ready(),
+                repeat=2)
+    lines.append(emit("kernels/flash_interpret_128", us, "mode=interpret"))
+    return lines

@@ -1,0 +1,40 @@
+"""Beyond-paper: RESPECT partitioning at pod scale.
+
+For each assigned architecture, partition the block graph across an 8-stage
+PodSystem ring and compare bottleneck stage time across scheduler backends.
+The MoE architectures are the headline: param-balancing (compiler-style)
+and FLOP-aware (exact/RESPECT) cuts disagree most there.
+"""
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.partitioner import partition_model
+
+from .common import emit, load_agent, timeit
+
+
+def run(stages: int = 8):
+    sched, trained = load_agent()
+    lines = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        evs = {}
+        for method in ("compiler", "exact", "respect"):
+            us = timeit(
+                lambda m=method: partition_model(
+                    cfg, SHAPES["train_4k"], stages, method=m,
+                    scheduler=sched if m == "respect" else None,
+                    mesh_slice=64),
+                repeat=2)
+            assign, ev, g = partition_model(
+                cfg, SHAPES["train_4k"], stages, method=method,
+                scheduler=sched if method == "respect" else None,
+                mesh_slice=64)
+            evs[method] = (us, ev)
+        base = evs["compiler"][1].bottleneck_s
+        lines.append(emit(
+            f"partitioner/{arch}", evs["respect"][0],
+            f"V={cfg.n_layers+2};"
+            f"exact_speedup={base/evs['exact'][1].bottleneck_s:.2f}x;"
+            f"respect_speedup={base/evs['respect'][1].bottleneck_s:.2f}x;"
+            f"exact_us={evs['exact'][0]:.0f};trained_agent={trained}"))
+    return lines

@@ -1,0 +1,39 @@
+"""Roofline table (deliverable g): aggregates artifacts/dryrun/*.json into
+the per-(arch x shape x mesh) three-term table EXPERIMENTS.md §Roofline
+reads.  Run the dry-run sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import glob
+import json
+
+from .common import emit
+
+
+def run(outdir: str = "artifacts/dryrun"):
+    lines = []
+    recs = []
+    for f in sorted(glob.glob(f"{outdir}/*.json")):
+        recs.append(json.loads(open(f).read()))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if not ok:
+        lines.append(emit("roofline/none", 0.0,
+                          "run repro.launch.dryrun first"))
+        return lines
+    for r in ok:
+        rl = r["roofline"]
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        lines.append(emit(
+            name, rl["step_lower_bound_s"] * 1e6,
+            f"dom={rl['dominant']};compute_s={rl['compute_s']:.3g};"
+            f"memory_s={rl['memory_s']:.3g};"
+            f"collective_s={rl['collective_s']:.3g};"
+            f"mfu_bound={rl['mfu_bound']:.4f};"
+            f"model_flops_ratio={rl['model_flops_ratio']:.3f};"
+            f"mem_GiB={r['memory']['peak_estimate_bytes']/2**30:.1f}"))
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    lines.append(emit("roofline/summary", 0.0,
+                      f"ok={len(ok)};skipped={len(skipped)};"
+                      f"failed={len(recs)-len(ok)-len(skipped)}"))
+    return lines

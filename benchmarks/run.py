@@ -1,0 +1,43 @@
+"""Benchmark harness entry point: one module per paper table/figure plus the
+beyond-paper pod-scale benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+"""
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+BENCHES = ["table1", "fig3", "fig4", "fig5", "partitioner", "kernels",
+           "roofline"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    want = args.only.split(",") if args.only else BENCHES
+
+    from . import (fig3_solving_time, fig4_inference_runtime,
+                   fig5_gap_to_optimal, kernels_bench, partitioner_bench,
+                   roofline_table, table1_graphs)
+    mods = {
+        "table1": table1_graphs, "fig3": fig3_solving_time,
+        "fig4": fig4_inference_runtime, "fig5": fig5_gap_to_optimal,
+        "partitioner": partitioner_bench, "kernels": kernels_bench,
+        "roofline": roofline_table,
+    }
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in want:
+        mods[name].run()
+    print(f"# total {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Table I: DNN model graph statistics (validates the graph builders)."""
+
+from repro.core import MODEL_SPECS, build_model_graph
+
+from .common import emit, timeit
+
+
+def run():
+    lines = []
+    for name, (v, deg, depth, params, macs, hw) in MODEL_SPECS.items():
+        us = timeit(build_model_graph, name, repeat=3)
+        g = build_model_graph(name)
+        ok = g.n == v and g.max_in_degree == deg and g.depth == depth
+        lines.append(emit(
+            f"table1/{name}", us,
+            f"V={g.n};deg={g.max_in_degree};depth={g.depth};"
+            f"params_MiB={g.param_bytes.sum()/2**20:.1f};match={ok}"))
+    return lines

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""RESPECT partitions a pod-scale LM across pipeline stages (the adaptation).
+
+Builds the block-level CompGraph of an assigned architecture at a shape cell,
+partitions it with the compiler-emulation / exact / RESPECT schedulers onto a
+PodSystem ring, prints the stage map + bottleneck comparison — then executes
+a REDUCED version of the winning partition on an actual shard_map pipeline
+(8 host devices) and verifies pipelined == sequential outputs.
+
+    PYTHONPATH=src python examples/pipeline_partition_demo.py --arch qwen3-32b
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, get_config, get_smoke_config  # noqa: E402
+from repro.core import PodSystem, RespectScheduler  # noqa: E402
+from repro.core.partitioner import (partition_model,  # noqa: E402
+                                    stage_assignment_to_layers)
+from repro.launch.mesh import make_pipeline_mesh  # noqa: E402
+from repro.parallel.pipeline import PipelineRunner  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--stages", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    agent = Path("artifacts/respect_agent.npz")
+    sched = (RespectScheduler.load(agent) if agent.exists()
+             else RespectScheduler.init(seed=0))
+
+    print(f"== partitioning {args.arch} @ {shape.name} into "
+          f"{args.stages} stages (PodSystem) ==")
+    rows = []
+    for method in ("compiler", "list", "exact", "respect"):
+        assign, ev, g = partition_model(
+            cfg, shape, args.stages, method=method,
+            scheduler=sched if method == "respect" else None,
+            mesh_slice=64)
+        rows.append((method, ev))
+        sizes = [int((assign == s).sum()) for s in range(args.stages)]
+        print(f"{method:9s} bottleneck={ev.bottleneck_s*1e3:8.2f} ms  "
+              f"stage sizes={sizes}  "
+              f"stage params GB={[round(p/1e9,1) for p in ev.stage_params]}")
+    base = rows[0][1].bottleneck_s
+    for method, ev in rows[1:]:
+        print(f"  {method} speedup over compiler: "
+              f"{base/ev.bottleneck_s:.2f}x")
+
+    # ---- execute a reduced version on a real shard_map pipeline -------- #
+    print("\n== executing reduced config on an 8-device shard_map pipeline ==")
+    small = get_smoke_config(args.arch)
+    if small.block_pattern is not None:
+        print("(hybrid pattern: pipeline runner demo uses the dense path)")
+        small = get_smoke_config("internlm2-1.8b")
+    small = small.scaled(n_layers=8)
+    assign, ev, g = partition_model(small, SHAPES["train_4k"], args.stages,
+                                    method="exact")
+    stages = stage_assignment_to_layers(small, assign)
+    if any(len(s) == 0 for s in stages):
+        # tiny-model edge case: the cost-optimal partition may leave a stage
+        # empty; the SPMD pipeline needs one block per stage, so even-split.
+        stages = [list(r) for r in np.array_split(
+            np.arange(small.n_layers), args.stages)]
+    mesh = make_pipeline_mesh(n_stages=args.stages, data=2, model=1)
+    runner = PipelineRunner(small, mesh, stages, n_micro=4, remat=False)
+    params = runner.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 2, 16, small.d_model)
+                          ).astype(jnp.bfloat16)
+    with jax.set_mesh(mesh):
+        y_pipe = jax.jit(runner.forward)(params, x)
+    y_seq = runner.sequential_forward(params, x)
+    err = float(jnp.max(jnp.abs(y_pipe.astype(jnp.float32)
+                                - y_seq.astype(jnp.float32))))
+    print(f"pipelined vs sequential max |err| = {err:.2e}  "
+          f"({'OK' if err < 1e-3 else 'MISMATCH'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Render the EXPERIMENTS.md roofline tables from artifacts/dryrun*."""
+
+import glob
+import json
+import sys
+
+
+def load(outdir):
+    recs = {}
+    for f in sorted(glob.glob(f"{outdir}/*.json")):
+        r = json.loads(open(f).read())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def table(recs, mesh="single"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL/HLO | mfu bound | mem GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped | — | — | — |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.2f} | {rl['collective_s']:.2f} | "
+            f"{rl['dominant']} | {rl['model_flops_ratio']:.3f} | "
+            f"{rl['mfu_bound']:.4f} | "
+            f"{r['memory']['peak_estimate_bytes']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    fa = len(recs) - ok - sk
+    return f"{len(recs)} cells: {ok} ok, {sk} skipped (documented), {fa} failed"
+
+
+if __name__ == "__main__":
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    recs = load(outdir)
+    print(summary(recs))
+    print()
+    print("### single-pod (16x16, 256 chips)\n")
+    print(table(recs, "single"))
+    print()
+    print("### multi-pod (2x16x16, 512 chips)\n")
+    print(table(recs, "multi"))

@@ -1,0 +1,137 @@
+"""Pipeline cost models: the Coral Edge TPU chain and the TPU-pod stage ring.
+
+The paper evaluates schedules on a physical chain of Coral Edge TPUs connected
+over USB 3.0.  This container has no Coral hardware, so the runtime numbers in
+EXPERIMENTS.md come from the analytic model below — which is the *same*
+abstraction the paper's exact ILP optimizes ("memory allocation and
+communication cost"), with constants from the public Coral datasheets:
+
+* 4 TOPS int8 peak per Edge TPU,
+* 8 MB on-chip SRAM for parameter caching; parameters beyond 8 MB are
+  re-streamed from the host over USB for *every* inference (this is the
+  documented Edge TPU behaviour and the reason multi-device pipelining helps),
+* ~320 MB/s effective USB 3.0 throughput (spec 5 Gb/s, practical << that).
+
+Stage time for a stage ``s`` holding node set ``V_s``:
+
+    T(s) = in_bytes(s) / usb_bw                      # activation transfer in
+         + flops(V_s) / (tops * eff)                 # systolic compute
+         + max(0, params(V_s) - sram) / usb_bw       # off-chip param stream
+
+``in_bytes(s)`` counts every tensor produced before stage ``s`` that is still
+live at the boundary (consumed at stage >= s) — tensors hop through the USB
+chain stage by stage, so each boundary crossing is charged at each boundary.
+
+The pipeline's steady-state throughput is the bottleneck ``max_s T(s)``; the
+single-image latency is ``sum_s T(s)``.  Schedulers minimize
+``(bottleneck, latency)`` lexicographically.
+
+:class:`PodSystem` re-parameterizes the same model for the pod-scale
+partitioner (ICI links instead of USB, HBM capacity instead of SRAM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import CompGraph
+
+__all__ = ["PipelineSystem", "EDGETPU", "PodSystem", "evaluate_schedule", "ScheduleEval"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSystem:
+    """Constants of a chained accelerator pipeline."""
+
+    n_stages: int
+    compute_rate: float = 4.0e12        # ops/s (Edge TPU: 4 TOPS int8)
+    compute_eff: float = 0.25           # fraction of peak a conv actually gets
+    link_bw: float = 320.0e6            # bytes/s (USB 3.0 effective)
+    cache_bytes: float = 8.0 * 2**20    # on-chip parameter cache (8 MB SRAM)
+    fixed_overhead_s: float = 1.0e-4    # per-stage host dispatch overhead
+
+    def with_stages(self, n_stages: int) -> "PipelineSystem":
+        return dataclasses.replace(self, n_stages=n_stages)
+
+
+EDGETPU = PipelineSystem(n_stages=4)
+
+
+def PodSystem(n_stages: int) -> PipelineSystem:
+    """TPU v5e pipeline-stage ring: ICI link + HBM residency budget."""
+    return PipelineSystem(
+        n_stages=n_stages,
+        compute_rate=197e12,        # bf16 FLOP/s per chip
+        compute_eff=0.5,
+        link_bw=50e9,               # bytes/s per ICI link
+        cache_bytes=16e9 * 0.7,     # HBM minus activation/headroom budget
+        fixed_overhead_s=5.0e-6,
+    )
+
+
+@dataclasses.dataclass
+class ScheduleEval:
+    stage_times: np.ndarray          # (n_stages,)
+    bottleneck_s: float
+    latency_s: float
+    stage_params: np.ndarray         # (n_stages,) parameter bytes per stage
+    stage_flops: np.ndarray
+    stage_in_bytes: np.ndarray
+    on_cache_bytes: np.ndarray       # per stage, min(params, cache)
+    off_cache_bytes: np.ndarray      # per stage, max(0, params - cache)
+
+    @property
+    def objective(self) -> tuple[float, float]:
+        return (self.bottleneck_s, self.latency_s)
+
+
+def evaluate_schedule(
+    graph: CompGraph, assign: np.ndarray, system: PipelineSystem
+) -> ScheduleEval:
+    """Evaluate a stage assignment under the pipeline cost model."""
+    assign = np.asarray(assign, dtype=np.int64)
+    k = system.n_stages
+    if assign.shape != (graph.n,):
+        raise ValueError("assignment length mismatch")
+
+    stage_params = np.zeros(k)
+    stage_flops = np.zeros(k)
+    np.add.at(stage_params, assign, graph.param_bytes)
+    np.add.at(stage_flops, assign, graph.flops)
+
+    # boundary b sits between stage b-1 and stage b; a tensor u crosses it if
+    # it is produced before b and consumed at/after b.
+    last_consumer_stage = assign.copy()
+    for v, ps in enumerate(graph.parents):
+        for u in ps:
+            last_consumer_stage[u] = max(last_consumer_stage[u], assign[v])
+    stage_in_bytes = np.zeros(k)
+    for u in range(graph.n):
+        lo, hi = assign[u] + 1, last_consumer_stage[u] + 1
+        if hi > lo:
+            stage_in_bytes[lo:hi] += graph.out_bytes[u]
+
+    off_cache = np.maximum(0.0, stage_params - system.cache_bytes)
+    on_cache = stage_params - off_cache
+    occupied = np.zeros(k)
+    np.add.at(occupied, assign, 1.0)
+    # Empty stages still forward tensors through the chain (in_bytes term) but
+    # pay no compute / overhead — identical to the DP's empty-segment cost.
+    stage_times = (
+        stage_in_bytes / system.link_bw
+        + stage_flops / (system.compute_rate * system.compute_eff)
+        + off_cache / system.link_bw
+        + np.where(occupied > 0, system.fixed_overhead_s, 0.0)
+    )
+    return ScheduleEval(
+        stage_times=stage_times,
+        bottleneck_s=float(stage_times.max(initial=0.0)),
+        latency_s=float(stage_times.sum()),
+        stage_params=stage_params,
+        stage_flops=stage_flops,
+        stage_in_bytes=stage_in_bytes,
+        on_cache_bytes=on_cache,
+        off_cache_bytes=off_cache,
+    )

@@ -1,0 +1,65 @@
+"""DNN computational-graph embedding (paper §III-A, Fig. 1a step 2).
+
+Per node the paper embeds four components:
+
+1. **absolute coordinates** — the node's ASAP topological level ``T_i``;
+2. **relative coordinates** — the parents' topological levels *and* the
+   parents' IDs (dependency structure); sources get level 0 and parent id -1;
+3. **node ID** — an integer obtained by hashing the operator name;
+4. **memory consumption** — the operator's memory footprint.
+
+We emit a fixed-width float matrix ``(n, 2 + 2*max_deg + 2)`` with columns
+
+    [T_i, parentT_1..parentT_D, parentID_1..parentID_D, node_id, mem]
+
+normalized into O(1) ranges (levels by graph depth, ids by the hash modulus,
+memory by a fixed byte scale) so one network serves graphs of any size — the
+paper's generalizability claim (train on |V|=30, deploy up to |V|=782) relies
+on the embedding being size-free.  ``max_deg`` defaults to 6, the largest
+complexity in the training mixture.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import CompGraph
+
+__all__ = ["embed_graph", "embed_dim", "PAD_PARENT_ID"]
+
+PAD_PARENT_ID = -1.0
+_MEM_SCALE = 1.0e6      # bytes; synthetic + Table-I graphs live around this
+_ID_MODULUS = 1 << 16
+
+
+def embed_dim(max_deg: int = 6) -> int:
+    return 2 + 2 * max_deg + 2
+
+
+def embed_graph(
+    graph: CompGraph,
+    max_deg: int = 6,
+    mem_scale: float = _MEM_SCALE,
+) -> np.ndarray:
+    """Embed a graph into the paper's per-node feature rows (float32)."""
+    n = graph.n
+    levels = graph.levels.astype(np.float64)
+    denom = max(float(levels.max()), 1.0)
+    ids = graph.op_ids(_ID_MODULUS).astype(np.float64) / _ID_MODULUS
+
+    feat = np.zeros((n, embed_dim(max_deg)), dtype=np.float32)
+    feat[:, 0] = levels / denom                                # absolute coord
+    for v, ps in enumerate(graph.parents):
+        if len(ps) > max_deg:
+            raise ValueError(f"in-degree {len(ps)} exceeds max_deg={max_deg}")
+        for j in range(max_deg):
+            if j < len(ps):
+                feat[v, 1 + j] = levels[ps[j]] / denom          # parent level
+                feat[v, 1 + max_deg + j] = ids[ps[j]]           # parent id
+            else:
+                feat[v, 1 + j] = 0.0                            # source conv.
+                feat[v, 1 + max_deg + j] = PAD_PARENT_ID
+    feat[:, 1 + 2 * max_deg] = ids                              # node id
+    mem = (graph.param_bytes + graph.out_bytes) / mem_scale
+    feat[:, 2 + 2 * max_deg] = np.log1p(mem)                    # memory column
+    return feat

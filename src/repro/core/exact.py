@@ -1,0 +1,271 @@
+"""Exact schedulers — the imitation targets for the RL agent.
+
+The paper solves the scheduling problem exactly with an ILP (CPLEX).  No ILP
+solver ships in this offline container, so two solver-equivalent exact methods
+are implemented:
+
+* :func:`exact_dp` — optimal *contiguous segmentation* of a fixed topological
+  order into ``n_stages`` pipeline segments, O(|V|^2 * n) dynamic program.
+  Every Table-I benchmark graph is chain-dominated (deg(V)=2,
+  depth ~= |V|), where monotone stage assignments coincide with contiguous
+  cuts, so the DP returns the true optimum for the real-model evaluation.
+* :func:`exact_bb` — branch-and-bound over *all* monotone stage assignments
+  (the ILP's feasible set).  Exact for arbitrary DAGs; used for the |V|=30
+  synthetic training graphs and to cross-verify the DP in property tests.
+* :func:`brute_force_monotone` — exhaustive enumeration for tiny graphs;
+  the test oracle for both of the above.
+
+Objective: lexicographic (pipeline bottleneck time, end-to-end latency) under
+:mod:`repro.core.costmodel`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .costmodel import PipelineSystem, evaluate_schedule
+from .graph import CompGraph
+
+__all__ = [
+    "segment_cost_table",
+    "boundary_bytes",
+    "exact_dp",
+    "exact_bb",
+    "brute_force_monotone",
+    "order_from_assignment",
+]
+
+
+def boundary_bytes(graph: CompGraph, order: np.ndarray) -> np.ndarray:
+    """bytes[b] crossing boundary ``b`` (between order positions b-1 and b)
+    for contiguous segmentations of ``order``: every tensor produced at
+    position < b whose last consumer sits at position >= b."""
+    n = graph.n
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+    diff = np.zeros(n + 2)
+    last_child = graph.last_child_index()
+    for u in range(n):
+        if last_child[u] < 0:
+            continue
+        lo = pos[u] + 1
+        # positions of all children; crossing persists until last consumer pos
+        hi = max(pos[v] for v in graph.children[u])
+        if hi >= lo:
+            diff[lo] += graph.out_bytes[u]
+            diff[hi + 1] -= graph.out_bytes[u]
+    return np.cumsum(diff)[: n + 1]  # index 0 (model input) kept at 0
+
+
+def segment_cost_table(
+    graph: CompGraph, order: np.ndarray, system: PipelineSystem
+) -> np.ndarray:
+    """(n+1, n+1) matrix C[i, j] = stage time of segment holding order
+    positions [i, j).  C[i, i] is the pure forwarding cost of an empty stage.
+    Entries with j < i are +inf."""
+    n = graph.n
+    flops = np.concatenate([[0.0], np.cumsum(graph.flops[order])])
+    params = np.concatenate([[0.0], np.cumsum(graph.param_bytes[order])])
+    bbytes = boundary_bytes(graph, order)
+
+    seg_flops = flops[None, :] - flops[:, None]              # [i, j]
+    seg_params = params[None, :] - params[:, None]
+    off_cache = np.maximum(0.0, seg_params - system.cache_bytes)
+    occupied = (np.arange(n + 1)[None, :] - np.arange(n + 1)[:, None]) > 0
+    cost = (
+        bbytes[:, None] / system.link_bw
+        + seg_flops / (system.compute_rate * system.compute_eff)
+        + off_cache / system.link_bw
+        + np.where(occupied, system.fixed_overhead_s, 0.0)
+    )
+    cost[seg_flops < 0] = np.inf
+    return cost
+
+
+def _lex_argmin(bottleneck: np.ndarray, latency: np.ndarray) -> int:
+    m = bottleneck.min()
+    cand = np.flatnonzero(bottleneck <= m * (1 + 1e-12) + 1e-30)
+    return int(cand[np.argmin(latency[cand])])
+
+
+def exact_dp(
+    graph: CompGraph,
+    n_stages: int,
+    system: PipelineSystem | None = None,
+    order: np.ndarray | None = None,
+) -> tuple[np.ndarray, float]:
+    """Optimal contiguous segmentation of ``order`` into ``n_stages`` stages.
+
+    Returns ``(assignment, bottleneck_seconds)``; assignment is per *node*
+    (not per position).  ``order`` defaults to the node index order, which is
+    topological by CompGraph construction (ASAP-compatible).
+    """
+    if system is None:
+        system = PipelineSystem(n_stages=n_stages)
+    system = system.with_stages(n_stages)
+    n = graph.n
+    order = np.arange(n) if order is None else np.asarray(order)
+    C = segment_cost_table(graph, order, system)
+
+    k = n_stages
+    # f_b[j], f_l[j]: best (bottleneck, latency) covering positions [0, j)
+    # with the current number of stages; arg[s][j]: split point.
+    f_b = C[0].copy()
+    f_l = C[0].copy()
+    args = np.zeros((k, n + 1), dtype=np.int64)
+    for s in range(1, k):
+        nb = np.empty(n + 1)
+        nl = np.empty(n + 1)
+        for j in range(n + 1):
+            b = np.maximum(f_b[: j + 1], C[: j + 1, j])
+            l = f_l[: j + 1] + C[: j + 1, j]
+            i = _lex_argmin(b, l)
+            nb[j], nl[j], args[s, j] = b[i], l[i], i
+        f_b, f_l = nb, nl
+
+    # backtrack
+    assign_pos = np.empty(n, dtype=np.int64)
+    j = n
+    for s in range(k - 1, -1, -1):
+        i = int(args[s, j]) if s > 0 else 0
+        assign_pos[i:j] = s
+        j = i
+    assign = np.empty(n, dtype=np.int64)
+    assign[order] = assign_pos
+    return assign, float(f_b[n])
+
+
+def order_from_assignment(assign: np.ndarray) -> np.ndarray:
+    """The imitation-target sequence gamma: nodes in (stage, index) order —
+    the order in which the exact algorithm commits nodes to the pipeline."""
+    assign = np.asarray(assign)
+    return np.lexsort((np.arange(len(assign)), assign))
+
+
+def exact_bb(
+    graph: CompGraph,
+    n_stages: int,
+    system: PipelineSystem | None = None,
+    time_budget_s: float = 10.0,
+) -> tuple[np.ndarray, float]:
+    """Branch-and-bound over all monotone stage assignments.
+
+    Nodes are committed in topological (index) order; a node may go to any
+    stage in [max(parent stages), n_stages).  All three cost terms are
+    monotone non-decreasing in the partial assignment, so the partial
+    bottleneck is an admissible lower bound.  Seeded with the DP incumbent.
+    """
+    if system is None:
+        system = PipelineSystem(n_stages=n_stages)
+    system = system.with_stages(n_stages)
+    k = n_stages
+    n = graph.n
+
+    inc_assign, _ = exact_dp(graph, k, system)
+    inc_eval = evaluate_schedule(graph, inc_assign, system)
+    best = [inc_eval.bottleneck_s, inc_eval.latency_s, inc_assign.copy()]
+
+    rate = system.compute_rate * system.compute_eff
+    bw = system.link_bw
+    cache = system.cache_bytes
+    ovh = system.fixed_overhead_s
+
+    stage_flops = np.zeros(k)
+    stage_params = np.zeros(k)
+    boundary = np.zeros(k + 1)      # bytes crossing each boundary (1..k-1)
+    occupied = np.zeros(k, dtype=np.int64)
+    assign = np.full(n, -1, dtype=np.int64)
+    maxcons = np.zeros(n, dtype=np.int64)   # furthest consumer stage so far
+    parents = graph.parents
+    flops_arr = graph.flops
+    params_arr = graph.param_bytes
+    out_arr = graph.out_bytes
+    deadline = time.monotonic() + time_budget_s
+
+    def stage_time(s: int) -> float:
+        off = stage_params[s] - cache
+        return (
+            boundary[s] / bw
+            + stage_flops[s] / rate
+            + (off / bw if off > 0 else 0.0)
+            + (ovh if occupied[s] else 0.0)
+        )
+
+    def dfs(v: int, cur_bound: float):
+        if time.monotonic() > deadline:
+            return
+        if v == n:
+            lat = sum(stage_time(s) for s in range(k))
+            better_b = cur_bound < best[0] * (1 - 1e-12)
+            tie_b = abs(cur_bound - best[0]) <= best[0] * 1e-12 + 1e-30
+            if better_b or (tie_b and lat < best[1] - 1e-30):
+                best[0], best[1], best[2] = cur_bound, lat, assign.copy()
+            return
+        lo = 0
+        for u in parents[v]:
+            lo = max(lo, assign[u])
+        for s in range(lo, k):
+            # apply node v -> stage s
+            stage_flops[s] += flops_arr[v]
+            stage_params[s] += params_arr[v]
+            occupied[s] += 1
+            maxcons[v] = s      # a tensor starts crossing after its producer
+            touched_b: list[tuple[int, float]] = []    # boundary increments
+            touched_m: list[tuple[int, int]] = []      # maxcons restores
+            for u in parents[v]:
+                if s > maxcons[u]:
+                    for b in range(maxcons[u] + 1, s + 1):
+                        boundary[b] += out_arr[u]
+                        touched_b.append((b, out_arr[u]))
+                    touched_m.append((u, maxcons[u]))
+                    maxcons[u] = s
+            assign[v] = s
+            # boundary b feeds stage b; only stages with changed terms can
+            # raise the bound (all terms are monotone in the assignment).
+            affected = {s} | {b for b, _ in touched_b if b < k}
+            nb = max([cur_bound] + [stage_time(t) for t in affected])
+            if nb <= best[0] * (1 + 1e-12):
+                dfs(v + 1, nb)
+            # undo
+            assign[v] = -1
+            for u, old in touched_m:
+                maxcons[u] = old
+            for b, val in touched_b:
+                boundary[b] -= val
+            occupied[s] -= 1
+            stage_params[s] -= params_arr[v]
+            stage_flops[s] -= flops_arr[v]
+
+    dfs(0, 0.0)
+    return best[2], float(best[0])
+
+
+def brute_force_monotone(
+    graph: CompGraph, n_stages: int, system: PipelineSystem | None = None
+) -> tuple[np.ndarray, float]:
+    """Exhaustive test oracle (use only for |V| <= ~10)."""
+    if system is None:
+        system = PipelineSystem(n_stages=n_stages)
+    system = system.with_stages(n_stages)
+    n = graph.n
+    best = (np.inf, np.inf, None)
+    assign = np.zeros(n, dtype=np.int64)
+
+    def rec(v: int):
+        nonlocal best
+        if v == n:
+            ev = evaluate_schedule(graph, assign, system)
+            key = (ev.bottleneck_s, ev.latency_s)
+            if key < best[:2]:
+                best = (key[0], key[1], assign.copy())
+            return
+        lo = max((assign[u] for u in graph.parents[v]), default=0)
+        for s in range(lo, n_stages):
+            assign[v] = s
+            rec(v + 1)
+        assign[v] = 0
+
+    rec(0)
+    return best[2], float(best[0])

@@ -1,0 +1,74 @@
+"""Post-inference processing (paper §III-B, last paragraph).
+
+The raw RL output need not satisfy the Edge TPU deployment rules.  The paper
+applies a deterministic repair at deployment time:
+
+1. **dependency repair** — "corrects the dependency violation by simply
+   pushing the involved node forward": in topological order, raise each
+   node's stage to at least the maximum of its parents' stages;
+2. **co-consumer rule** — "Edge TPU hardware requires children nodes of any
+   node to be in the same pipeline, where the post-inference procedure
+   assigns these nodes to the earliest predicted stage": a tensor leaving a
+   segment is routed to exactly one next segment, so all consumers of a
+   multi-consumer tensor are pulled to the earliest consumer stage that is
+   still dependency-feasible.
+
+The two rules can re-trigger each other, so :func:`repair` alternates them to
+a fixed point (bounded iterations; termination is tested on random graphs)
+and always finishes with a final dependency pass — monotonicity is the hard
+constraint, the co-consumer rule is best-effort (matching the paper's
+"minimum changes to the RL solution").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import CompGraph, validate_monotone
+
+__all__ = ["repair", "dependency_repair", "co_consumer_repair"]
+
+
+def dependency_repair(graph: CompGraph, assign: np.ndarray, n_stages: int) -> np.ndarray:
+    out = np.asarray(assign, dtype=np.int64).copy()
+    np.clip(out, 0, n_stages - 1, out=out)
+    for v in range(graph.n):           # node order is topological
+        for u in graph.parents[v]:
+            if out[u] > out[v]:
+                out[v] = out[u]
+    return out
+
+
+def co_consumer_repair(graph: CompGraph, assign: np.ndarray) -> np.ndarray:
+    """Pull all children of each multi-consumer node to the earliest child
+    stage that still dominates each child's parents."""
+    out = np.asarray(assign, dtype=np.int64).copy()
+    for u in range(graph.n):
+        ch = graph.children[u]
+        if len(ch) < 2:
+            continue
+        earliest = min(out[v] for v in ch)
+        for v in ch:
+            lo = max((out[p] for p in graph.parents[v]), default=0)
+            out[v] = max(earliest, lo)
+    return out
+
+
+def repair(
+    graph: CompGraph,
+    assign: np.ndarray,
+    n_stages: int,
+    max_iters: int = 8,
+    enforce_co_consumer: bool = True,
+) -> np.ndarray:
+    """Deterministic deployment repair; output always satisfies monotonicity."""
+    out = dependency_repair(graph, assign, n_stages)
+    if enforce_co_consumer:
+        for _ in range(max_iters):
+            nxt = dependency_repair(graph, co_consumer_repair(graph, out), n_stages)
+            if np.array_equal(nxt, out):
+                break
+            out = nxt
+    out = dependency_repair(graph, out, n_stages)
+    assert validate_monotone(graph, out, n_stages)
+    return out

@@ -1,0 +1,180 @@
+"""LSTM pointer network (paper §III-B, Fig. 1b, Alg. 1) in pure JAX.
+
+Encoder: an LSTM digests the embedded node queue ``q`` and produces the
+context matrix ``C`` (one d-dim context per node) plus its final latent state,
+which seeds the decoder.  Decoder: at each step the LSTM consumes the
+embedding of the previously picked node (a trainable ``dec0`` vector at step
+0), a *glimpse* attention refines the query against ``C``, and a *pointer*
+head scores every node; visited nodes get ``-inf`` logits (Alg. 1), and —
+optionally, ``mask_infeasible`` — so do nodes whose parents are not all
+scheduled, which makes every emitted sequence a topological order.
+
+Everything is a plain parameter pytree + functional apply, so the whole
+decode loop jits and vmaps; the pointer/glimpse inner product is also
+implemented as a Pallas TPU kernel (``repro.kernels.ptr``) selected via
+``impl=`` for deployment-time inference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "init_params",
+    "encode",
+    "decode",
+    "greedy_order",
+    "sample_order",
+    "NEG_INF",
+]
+
+NEG_INF = -1.0e9
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+def init_params(key, feat_dim: int, hidden: int = 256) -> dict:
+    """Parameter pytree for the LSTM-PtrNet (paper: 256-cell LSTMs)."""
+    ks = jax.random.split(key, 12)
+    def lstm(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "wx": _glorot(k1, (hidden, 4 * hidden)),
+            "wh": _glorot(k2, (hidden, 4 * hidden)),
+            "b": jnp.zeros((4 * hidden,)),
+        }
+    return {
+        "w_in": _glorot(ks[0], (feat_dim, hidden)),
+        "b_in": jnp.zeros((hidden,)),
+        "enc": lstm(ks[1]),
+        "dec": lstm(ks[2]),
+        "glimpse": {
+            "w_ref": _glorot(ks[3], (hidden, hidden)),
+            "w_q": _glorot(ks[4], (hidden, hidden)),
+            "v": _glorot(ks[5], (hidden, 1))[:, 0],
+        },
+        "pointer": {
+            "w_ref": _glorot(ks[6], (hidden, hidden)),
+            "w_q": _glorot(ks[7], (hidden, hidden)),
+            "v": _glorot(ks[8], (hidden, 1))[:, 0],
+        },
+        "dec0": jax.random.normal(ks[9], (hidden,)) * 0.1,
+    }
+
+
+def _lstm_step(p, x, state):
+    h, c = state
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def encode(params, feats):
+    """feats (n, F) -> contexts C (n, H), final (h, c), projected emb (n, H)."""
+    emb = feats @ params["w_in"] + params["b_in"]
+    hidden = params["enc"]["wh"].shape[0]
+    init = (jnp.zeros(hidden), jnp.zeros(hidden))
+
+    def step(state, x):
+        state = _lstm_step(params["enc"], x, state)
+        return state, state[0]
+
+    final, contexts = jax.lax.scan(step, init, emb)
+    return contexts, final, emb
+
+
+def _attention_scores(head, C, query):
+    """v . tanh(C @ W_ref + query @ W_q) per node — the glimpse/pointer op."""
+    return jnp.tanh(C @ head["w_ref"] + query @ head["w_q"]) @ head["v"]
+
+
+def pointer_logits(params, C, h, mask):
+    """One decode step's glimpse + pointer (Alg. 1 lines 3-5); mask True =
+    selectable.  Pure-jnp reference shared by the Pallas kernel tests."""
+    g_scores = jnp.where(mask, _attention_scores(params["glimpse"], C, h), NEG_INF)
+    attn = jax.nn.softmax(g_scores)
+    glimpse = attn @ C
+    logits = _attention_scores(params["pointer"], C, glimpse)
+    return jnp.where(mask, logits, NEG_INF)
+
+
+def decode(
+    params,
+    C,
+    emb,
+    enc_state,
+    parent_mat,
+    *,
+    sample_key=None,
+    mask_infeasible: bool = True,
+    logits_fn=None,
+):
+    """Run the full pointing decode (Alg. 1).
+
+    Args:
+      C: (n, H) contexts.  emb: (n, H) projected node embeddings.
+      enc_state: final encoder (h, c) — initial decoder latent state.
+      parent_mat: (n, max_deg) int32 parent indices, -1 padded.
+      sample_key: PRNG key -> stochastic decode; None -> greedy (argmax).
+      mask_infeasible: additionally mask nodes with unscheduled parents.
+      logits_fn: override for the glimpse+pointer op (e.g. Pallas kernel).
+
+    Returns: order (n,) int32, logp (n,) per-step log-probs, entropy (n,).
+    """
+    n = C.shape[0]
+    if logits_fn is None:
+        logits_fn = functools.partial(pointer_logits, params)
+    keys = (
+        jax.random.split(sample_key, n)
+        if sample_key is not None
+        else jnp.zeros((n, 2), jnp.uint32)
+    )
+
+    def step(carry, key):
+        state, d, visited = carry
+        state = _lstm_step(params["dec"], d, state)
+        h = state[0]
+        mask = ~visited
+        if mask_infeasible:
+            pvisited = jnp.where(parent_mat >= 0, visited[parent_mat.clip(0)], True)
+            mask &= pvisited.all(axis=-1)
+        logits = logits_fn(C, h, mask)
+        logprobs = jax.nn.log_softmax(logits)
+        if sample_key is not None:
+            idx = jax.random.categorical(key, logits)
+        else:
+            idx = jnp.argmax(logits)
+        probs = jnp.exp(logprobs)
+        ent = -jnp.sum(jnp.where(probs > 0, probs * logprobs, 0.0))
+        visited = visited.at[idx].set(True)
+        return (state, emb[idx], visited), (idx, logprobs[idx], ent)
+
+    init = (enc_state, params["dec0"], jnp.zeros(n, bool))
+    _, (order, logp, ent) = jax.lax.scan(step, init, keys)
+    return order.astype(jnp.int32), logp, ent
+
+
+def _run(params, feats, parent_mat, sample_key, mask_infeasible):
+    C, enc_state, emb = encode(params, feats)
+    return decode(
+        params, C, emb, enc_state, parent_mat,
+        sample_key=sample_key, mask_infeasible=mask_infeasible,
+    )
+
+
+def greedy_order(params, feats, parent_mat, mask_infeasible=True):
+    return _run(params, feats, parent_mat, None, mask_infeasible)
+
+
+def sample_order(params, feats, parent_mat, key, mask_infeasible=True):
+    return _run(params, feats, parent_mat, key, mask_infeasible)

@@ -1,0 +1,119 @@
+"""RespectScheduler — the deployable facade (paper Fig. 1a, steps 1-4).
+
+``schedule(graph, n_stages)`` runs the full inference path:
+
+  step 1  graph is already a :class:`CompGraph` (DAG extraction happens in
+          :mod:`repro.core.dnn_graphs` for the Table-I models and in
+          :mod:`repro.core.partitioner` for pod-scale LMs);
+  step 2  embed (:func:`repro.core.embedding.embed_graph`);
+  step 3  LSTM-PtrNet greedy decode -> node sequence pi;
+  step 4  rho(pi) -> stage assignment, post-inference repair, ready for
+          deployment (the Edge TPU simulator or the pod pipeline runner).
+
+Checkpoints are plain ``.npz`` parameter dumps; a pretrained agent trained by
+``examples/train_respect.py`` ships with the benchmarks.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ptrnet
+from .costmodel import PipelineSystem
+from .embedding import embed_dim, embed_graph
+from .graph import CompGraph
+from .postprocess import repair
+from .rho import rho
+
+__all__ = ["RespectScheduler", "ScheduleResult"]
+
+
+class ScheduleResult(dict):
+    """assignment + provenance; behaves like a dict for serialization."""
+
+    @property
+    def assignment(self) -> np.ndarray:
+        return self["assignment"]
+
+
+class RespectScheduler:
+    def __init__(self, params, hidden: int | None = None,
+                 mask_infeasible: bool = True, max_deg: int = 6):
+        self.params = params
+        self.mask_infeasible = mask_infeasible
+        self.max_deg = max_deg
+        self._jitted: dict[int, callable] = {}
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def init(cls, seed: int = 0, hidden: int = 256, max_deg: int = 6,
+             mask_infeasible: bool = True) -> "RespectScheduler":
+        params = ptrnet.init_params(
+            jax.random.PRNGKey(seed), embed_dim(max_deg), hidden)
+        return cls(params, mask_infeasible=mask_infeasible, max_deg=max_deg)
+
+    def save(self, path: str | Path) -> None:
+        flat = {}
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(self.params)
+        for kp, leaf in leaves:
+            flat[jax.tree_util.keystr(kp)] = np.asarray(leaf)
+        np.savez(path, **flat)
+
+    @classmethod
+    def load(cls, path: str | Path, **kw) -> "RespectScheduler":
+        data = np.load(path)
+        params: dict = {}
+        for key in data.files:
+            # keys look like ["enc"]["wx"]
+            parts = [p.strip("'\"") for p in key.strip("[]").split("][")]
+            d = params
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = jnp.asarray(data[key])
+        return cls(params, **kw)
+
+    # ------------------------------------------------------------------ #
+    def _order_fn(self, n: int):
+        """Per-size jitted greedy decode (sizes are few: one per model)."""
+        if n not in self._jitted:
+            self._jitted[n] = jax.jit(
+                lambda params, feats, pmat: ptrnet.greedy_order(
+                    params, feats, pmat, self.mask_infeasible)
+            )
+        return self._jitted[n]
+
+    def order(self, graph: CompGraph) -> np.ndarray:
+        feats = jnp.asarray(embed_graph(graph, self.max_deg))
+        pmat = jnp.asarray(graph.parent_matrix(self.max_deg))
+        order, _, _ = self._order_fn(graph.n)(self.params, feats, pmat)
+        return np.asarray(order)
+
+    def schedule(
+        self,
+        graph: CompGraph,
+        n_stages: int,
+        system: PipelineSystem | None = None,
+        return_timing: bool = False,
+    ) -> ScheduleResult:
+        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        t0 = time.perf_counter()
+        order = self.order(graph)
+        t_net = time.perf_counter() - t0
+        assignment = rho(graph, order, n_stages, system)
+        assignment = repair(graph, assignment, n_stages)
+        t_total = time.perf_counter() - t0
+        res = ScheduleResult(
+            assignment=assignment,
+            order=order,
+            n_stages=n_stages,
+            model=graph.model_name,
+        )
+        if return_timing:
+            res["t_network_s"] = t_net
+            res["t_total_s"] = t_total
+        return res

@@ -1,0 +1,41 @@
+"""The rho mapping (paper Eq. 2): node sequence -> stage assignment.
+
+The PtrNet emits an *order* pi over nodes; the deployable schedule is
+``S' = rho(pi, s_k)`` — the scheduling algorithm "w.r.t the specific Edge
+TPU".  We realize rho as the optimal contiguous segmentation of the emitted
+order under the pipeline cost model (the same O(n^2 k) DP used by the exact
+solver, restricted to the given order).  Properties:
+
+* rho(gamma) reproduces the exact solver's assignment when gamma is the
+  solver's own sequence (tested), so a perfectly-imitating policy scores
+  reward 1 and deploys the exact-optimal schedule;
+* rho is deterministic and cheap (poly-time), preserving the paper's claim
+  that RL inference + rho replaces the exact search.
+
+A JAX twin of this DP lives in :mod:`repro.core.rl` so the cosine reward of
+Eq. 3 is computed inside the jitted training step.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .costmodel import PipelineSystem
+from .exact import exact_dp
+from .graph import CompGraph
+
+__all__ = ["rho"]
+
+
+def rho(
+    graph: CompGraph,
+    order: np.ndarray,
+    n_stages: int,
+    system: PipelineSystem | None = None,
+) -> np.ndarray:
+    """Map a node sequence to a per-node stage assignment."""
+    order = np.asarray(order, dtype=np.int64)
+    if sorted(order.tolist()) != list(range(graph.n)):
+        raise ValueError("order must be a permutation of the nodes")
+    assign, _ = exact_dp(graph, n_stages, system, order=order)
+    return assign

@@ -1,0 +1,2 @@
+from .tokens import TokenStream, make_batch_iterator  # noqa: F401
+from .dags import LabeledDagDataset  # noqa: F401

@@ -1,0 +1,108 @@
+"""Labeled synthetic-DAG dataset for RL training (paper's training data).
+
+Generating exact labels (branch-and-bound per graph) costs ~5-50 ms, so the
+dataset is materialized once and cached as ``.npz``; the cache key encodes
+(seed, count, |V|, stages, solver).  Training then samples fixed-shape
+``GraphBatch`` packs from the cache.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+
+from ..core.costmodel import PipelineSystem
+from ..core.embedding import embed_graph
+from ..core.exact import exact_bb, exact_dp, order_from_assignment
+from ..core.graph import CompGraph
+from ..core.sampler import sample_batch
+
+__all__ = ["LabeledDagDataset"]
+
+
+class LabeledDagDataset:
+    def __init__(self, count: int = 4096, n: int = 30, n_stages: int = 4,
+                 seed: int = 0, label_method: str = "bb",
+                 bb_budget_s: float = 0.05, max_deg: int = 6,
+                 system: PipelineSystem | None = None,
+                 cache_dir: str | Path = "artifacts/dag_cache"):
+        self.count, self.n, self.n_stages = count, n, n_stages
+        self.seed, self.label_method = seed, label_method
+        self.bb_budget_s, self.max_deg = bb_budget_s, max_deg
+        self.system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        self.cache_dir = Path(cache_dir)
+        self._data = None
+
+    # ------------------------------------------------------------------ #
+    def _cache_path(self) -> Path:
+        key = json.dumps({
+            "count": self.count, "n": self.n, "k": self.n_stages,
+            "seed": self.seed, "method": self.label_method,
+            "budget": self.bb_budget_s,
+            "sys": [self.system.compute_rate, self.system.link_bw,
+                    self.system.cache_bytes],
+        }, sort_keys=True)
+        h = hashlib.sha256(key.encode()).hexdigest()[:16]
+        return self.cache_dir / f"dags_{h}.npz"
+
+    def build(self, verbose: bool = False) -> dict:
+        path = self._cache_path()
+        if path.exists():
+            self._data = dict(np.load(path))
+            return self._data
+        rng = np.random.default_rng(self.seed)
+        feats, pmat, fl, pb, ob, la, lo = [], [], [], [], [], [], []
+        batch = 64
+        done = 0
+        while done < self.count:
+            for g in sample_batch(rng, min(batch, self.count - done), n=self.n):
+                feats.append(embed_graph(g, self.max_deg))
+                pmat.append(g.parent_matrix(self.max_deg))
+                fl.append(g.flops)
+                pb.append(g.param_bytes)
+                ob.append(g.out_bytes)
+                if self.label_method == "bb":
+                    a, _ = exact_bb(g, self.n_stages, self.system,
+                                    time_budget_s=self.bb_budget_s)
+                else:
+                    a, _ = exact_dp(g, self.n_stages, self.system)
+                la.append(a)
+                lo.append(order_from_assignment(a))
+                done += 1
+            if verbose:
+                print(f"  labeled {done}/{self.count}")
+        self._data = {
+            "feats": np.stack(feats).astype(np.float32),
+            "parent_mat": np.stack(pmat).astype(np.int32),
+            "flops": np.stack(fl).astype(np.float32),
+            "param_bytes": np.stack(pb).astype(np.float32),
+            "out_bytes": np.stack(ob).astype(np.float32),
+            "label_assign": np.stack(la).astype(np.int32),
+            "label_order": np.stack(lo).astype(np.int32),
+        }
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+        np.savez(path, **self._data)
+        return self._data
+
+    # ------------------------------------------------------------------ #
+    def batch(self, step: int, batch_size: int):
+        """Deterministic fixed-shape batch (jnp) for a training step."""
+        import jax.numpy as jnp
+        from ..core.rl import GraphBatch
+        if self._data is None:
+            self.build()
+        rng = np.random.default_rng((self.seed, step))
+        idx = rng.integers(0, len(self._data["feats"]), size=batch_size)
+        d = self._data
+        return GraphBatch(
+            feats=jnp.asarray(d["feats"][idx]),
+            parent_mat=jnp.asarray(d["parent_mat"][idx]),
+            flops=jnp.asarray(d["flops"][idx]),
+            param_bytes=jnp.asarray(d["param_bytes"][idx]),
+            out_bytes=jnp.asarray(d["out_bytes"][idx]),
+            label_assign=jnp.asarray(d["label_assign"][idx]),
+            label_order=jnp.asarray(d["label_order"][idx]),
+        )

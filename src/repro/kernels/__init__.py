@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Three kernels, each a subpackage with the required triple:
+
+* ``kernel.py`` — ``pl.pallas_call`` + explicit ``BlockSpec`` VMEM tiling
+  (TPU is the target; validated on CPU via ``interpret=True``);
+* ``ops.py``   — the jitted public wrapper with automatic implementation
+  selection (``pallas`` on TPU, memory-representative chunked-jnp fallback on
+  CPU so dry-run HLO keeps the kernel's algorithmic footprint);
+* ``ref.py``   — the pure-jnp oracle used by the allclose test sweeps.
+
+Kernels:
+
+* ``flash``  — causal GQA flash-attention forward (online softmax), the
+  training/prefill hot spot of every assigned LM architecture;
+* ``ptr``    — RESPECT's fused pointer/glimpse decode step (the op executed
+  |V| times per scheduled graph — the paper's own hot loop);
+* ``ssd``    — Mamba-2 SSD chunked state-space scan (zamba2 / long-context
+  decode cells).
+
+Import subpackages directly (``from repro.kernels import flash``) — the
+package root stays import-light so model code can load fast.
+"""

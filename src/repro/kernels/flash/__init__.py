@@ -1,0 +1,2 @@
+from .ops import flash_attention, decode_attention  # noqa: F401
+from .ref import reference_attention, reference_chunked  # noqa: F401

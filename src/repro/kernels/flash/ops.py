@@ -1,0 +1,69 @@
+"""Public attention ops with automatic implementation selection.
+
+``impl`` resolution:
+
+* ``"pallas"``     — the TPU kernel (default when running on TPU);
+* ``"interpret"``  — the same kernel body executed by the Pallas interpreter
+                     (CPU correctness tests);
+* ``"chunked"``    — lax.scan online-softmax reference: used on CPU for the
+                     dry-run so the compiled HLO has the kernel's O(S) memory
+                     footprint instead of an O(S^2) score tensor (default off
+                     TPU);
+* ``"ref"``        — textbook O(S^2) oracle (tiny shapes / debugging).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import reference_attention, reference_chunked
+from .vjp import flash_mha_vjp
+
+__all__ = ["flash_attention", "decode_attention"]
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "chunked"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    impl: str | None = None, block_q: int = 128,
+                    block_k: int = 128):
+    """Multi-head attention, q:(B,Hq,Sq,D) k/v:(B,Hkv,Sk,D) -> (B,Hq,Sq,D).
+
+    "pallas" and "chunked" route through the flash custom-VJP wrapper so the
+    backward is flash too (O(S) residuals); "interpret"/"ref" stay raw for
+    the kernel-vs-oracle test sweeps.
+    """
+    impl = impl or _default_impl()
+    if scale is None:
+        scale = float(q.shape[-1] ** -0.5)
+    if impl == "pallas":
+        fwd = lambda q_, k_, v_, causal, scale: flash_attention_pallas(
+            q_, k_, v_, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k)
+        return flash_mha_vjp(q, k, v, causal, scale,
+                             min(block_k * 4, k.shape[2]), fwd)
+    if impl == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=True)
+    if impl == "chunked":
+        blk = min(block_k * 4, k.shape[2])
+        return flash_mha_vjp(q, k, v, causal, scale, blk, None)
+    if impl == "ref":
+        return reference_attention(q, k, v, causal=causal, scale=scale)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, scale: float | None = None):
+    """Single-token decode: q (B, Hq, 1, D) against a (B, Hkv, S, D) cache of
+    which the first ``kv_len`` entries are valid.  Memory-bound gather +
+    reduction; XLA fuses this well without a custom kernel (the roofline's
+    memory term, not compute, dominates decode)."""
+    return reference_attention(q, k_cache, v_cache, causal=False, scale=scale,
+                               kv_len=kv_len)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for flash attention.
+
+``reference_attention`` — the O(S^2)-memory textbook computation; ground
+truth for the allclose sweeps.
+
+``reference_chunked`` — the same online-softmax recurrence the Pallas kernel
+runs, expressed with ``jax.lax.scan`` over key blocks.  Numerically ~equal to
+the oracle, but its HLO never materializes the (S, S) score matrix — the CPU
+dry-run fallback, so compiled memory/cost analysis reflects the kernel's
+algorithmic footprint at 32k prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reference_attention", "reference_chunked"]
+
+
+def _expand_kv(k, hq):
+    """(B, Hkv, S, D) -> (B, Hq, S, D) by group broadcast (GQA)."""
+    b, hkv, s, d = k.shape
+    if hkv == hq:
+        return k
+    group = hq // hkv
+    return jnp.repeat(k, group, axis=1)
+
+
+def reference_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                        kv_len: jnp.ndarray | None = None):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D). fp32 softmax, output q.dtype.
+
+    ``kv_len`` optionally masks keys at index >= kv_len (ragged decode).
+    """
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal and sq > 1:
+        # queries sit at the END of the kv sequence (prefill: sq == sk)
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    if kv_len is not None:
+        s = jnp.where(jnp.arange(sk)[None, None, None, :] < kv_len, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def reference_chunked(q, k, v, causal: bool = True, scale: float | None = None,
+                      block_k: int = 512):
+    """Online-softmax over key chunks (flash recurrence) with lax.scan."""
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    dv = v.shape[-1]
+    nblk = -(-sk // block_k)
+    pad = nblk * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, hq, nblk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hq, nblk, block_k, dv).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32)
+    q_pos = jnp.arange(sq) + (sk - sq)
+
+    def step(carry, blk):
+        m, l, acc, j = carry
+        kj, vj = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj.astype(jnp.float32)) * scale
+        k_pos = j * block_k + jnp.arange(block_k)
+        mask = k_pos[None, :] < sk
+        if causal and sq > 1:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new, j + 1), None
+
+    init = (
+        jnp.full((b, hq, sq), -jnp.inf, jnp.float32),
+        jnp.zeros((b, hq, sq), jnp.float32),
+        jnp.zeros((b, hq, sq, dv), jnp.float32),
+        jnp.asarray(0, jnp.int32),
+    )
+    (m, l, acc, _), _ = jax.lax.scan(step, init, (kb, vb))
+    return (acc / l[..., None]).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import pointer_step, precompute_refs  # noqa: F401
+from .ref import reference_pointer_step  # noqa: F401

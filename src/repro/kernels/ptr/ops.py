@@ -1,0 +1,42 @@
+"""Public wrapper for the fused pointer/glimpse step."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import pointer_step_pallas
+from .ref import reference_pointer_step
+
+__all__ = ["precompute_refs", "pointer_step"]
+
+
+def precompute_refs(params, C):
+    """Hoist the decode-loop-invariant context projections.
+
+    params: a ptrnet parameter pytree (uses glimpse/pointer heads).
+    C: (n, H) or (B, n, H).  Returns (CWg, CWp).
+    """
+    return C @ params["glimpse"]["w_ref"], C @ params["pointer"]["w_ref"]
+
+
+def pointer_step(params, C, CWg, CWp, h, mask, *, impl: str | None = None):
+    """One decode step; shapes as in the kernel (batched) or unbatched.
+
+    impl: "pallas" | "interpret" | "ref" (auto: pallas on TPU else ref).
+    """
+    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "ref")
+    g, p = params["glimpse"], params["pointer"]
+    unbatched = C.ndim == 2
+    if impl == "ref":
+        fn = lambda c, cg, cp, hh, mm: reference_pointer_step(
+            c, cg, cp, hh, g["w_q"], g["v"], p["w_q"], p["v"], mm)
+        if unbatched:
+            return fn(C, CWg, CWp, h, mask)
+        return jax.vmap(fn)(C, CWg, CWp, h, mask)
+    if unbatched:
+        C, CWg, CWp, h, mask = (x[None] for x in (C, CWg, CWp, h, mask))
+    out = pointer_step_pallas(
+        C, CWg, CWp, h, g["w_q"], g["v"], p["w_q"], p["v"], mask,
+        interpret=(impl == "interpret"))
+    return out[0] if unbatched else out

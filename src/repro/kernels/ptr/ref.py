@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused pointer/glimpse decode step.
+
+Mirrors :func:`repro.core.ptrnet.pointer_logits` exactly, but takes the
+ref-side projections ``CWg = C @ W_ref_g`` and ``CWp = C @ W_ref_p``
+precomputed — they are loop-invariant across the |V| decode steps of one
+graph, so hoisting them is the first (algebraic) optimization the kernel
+bakes in; tests assert parity against the unhoisted ptrnet path too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reference_pointer_step"]
+
+NEG_INF = -1.0e9
+
+
+def reference_pointer_step(C, CWg, CWp, h, w_q_g, v_g, w_q_p, v_p, mask):
+    """One glimpse+pointer step.
+
+    C, CWg, CWp: (n, H); h: (H,); w_q_*: (H, H); v_*: (H,); mask: (n,) bool.
+    Returns logits (n,) with masked entries at NEG_INF.
+    """
+    qg = h @ w_q_g
+    sg = jnp.tanh(CWg + qg[None, :]) @ v_g
+    sg = jnp.where(mask, sg, NEG_INF)
+    attn = jax.nn.softmax(sg)
+    glimpse = attn @ C
+    qp = glimpse @ w_q_p
+    logits = jnp.tanh(CWp + qp[None, :]) @ v_p
+    return jnp.where(mask, logits, NEG_INF)

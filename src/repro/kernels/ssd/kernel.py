@@ -1,0 +1,134 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: (batch, heads, S/Q) — the chunk axis is last, hence sequential on TPU,
+and the inter-chunk state (N, P fp32) lives in VMEM scratch carried across
+chunk iterations; one kernel launch covers the whole sequence with zero HBM
+state traffic.
+
+Per-chunk VMEM working set at Q=128, N=64, P=64:
+
+    x (Q,P) + B,C (Q,N) + decay L (Q,Q fp32) + state (N,P fp32)  ~= 130 KB
+
+MXU work per chunk: C@B^T (Q,Q,N-contraction), the (Q,Q)@(Q,P) intra matmul,
+the (Q,N)^T@(Q,P) state update and the (Q,N)@(N,P) inter term — all dims
+padded to lane multiples by the wrapper.  This is the TPU-native shape of
+the SSD "matrix-form" algorithm (Dao & Gu 2024), adapted from the CUDA
+warp-level version: instead of warp shuffles for the running state, the
+sequential-grid + VMEM-scratch idiom expresses the same carry.
+
+The B/C group broadcast (GQA-style ``G`` state groups shared by H/G heads)
+happens in the index_map — head h reads group h // (H/G) — so grouped
+layouts never materialize repeated tensors in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _ssd_kernel(x_ref, dt_ref, sc_ref, A_ref, B_ref, C_ref, y_ref, hout_ref,
+                h_ref, *, chunk: int, nchunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (Q,)
+    sc = sc_ref[0, :, 0].astype(jnp.float32)      # (Q,) input gate
+    A = A_ref[0].astype(jnp.float32)              # scalar per head
+    Bm = B_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+    Cm = C_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+
+    loga = -A * dt                                # (Q,)
+    la = jnp.cumsum(loga)                         # inclusive
+    L = jnp.exp(la[:, None] - la[None, :])
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, L, 0.0)
+
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    scores = scores * L                           # (Q, Q)
+    dx = sc[:, None] * x                          # (Q, P)
+    y_intra = jax.lax.dot_general(
+        scores, dx, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    hstate = h_ref[...]                           # (N, P)
+    y_inter = jnp.exp(la)[:, None] * jax.lax.dot_general(
+        Cm, hstate, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    w = jnp.exp(la[-1] - la)                      # (Q,)
+    h_new = jnp.exp(la[-1]) * hstate + jax.lax.dot_general(
+        Bm * w[:, None], dx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(c == nchunks - 1)
+    def _final():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = False,
+                    in_scale=None):
+    """x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,); B, C: (Bt, S, G, N).
+
+    Returns (y (Bt, S, H, P), h_final (Bt, H, N, P) fp32).
+    """
+    if in_scale is None:
+        in_scale = dt
+    bt, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if s % chunk:
+        raise ValueError("S must divide chunk")
+    if h % g:
+        raise ValueError("H must divide G")
+    hpg = h // g
+    nc = s // chunk
+    grid = (bt, h, nc)
+
+    if _VMEM is None:  # pragma: no cover
+        raise RuntimeError("pallas TPU helpers unavailable")
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nchunks=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),
+            pl.BlockSpec((1, chunk, 1), lambda b, hh, c: (b, c, hh)),
+            pl.BlockSpec((1,), lambda b, hh, c: (hh,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b, hh, c, q=hpg: (b, c, hh // q, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b, hh, c, q=hpg: (b, c, hh // q, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda b, hh, c: (b, c, hh, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bt, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[_VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, in_scale, A, B, C)
+    return y, hout

@@ -1,0 +1,50 @@
+"""Public SSD scan op with implementation selection."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_pallas
+from .ref import reference_ssd, reference_ssd_chunked
+
+__all__ = ["ssd_scan"]
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, impl: str | None = None,
+             in_scale=None):
+    """Batched SSD scan; shapes as in the kernel.  Returns (y, h_final).
+
+    ``in_scale`` (Bt, S, H) decouples the input gate from the decay
+    (mLSTM); None ties it to dt (Mamba-2).  Sequences that don't divide the
+    chunk are right-padded with identity steps (dt=0 -> decay 1, zero input)
+    so the carried state is unaffected.
+    """
+    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "chunked")
+    s = x.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad and impl != "ref":
+        def padded(arr, axis=1):
+            w = [(0, 0)] * arr.ndim
+            w[axis] = (0, pad)
+            return jnp.pad(arr, w)
+        y, hf = ssd_scan(padded(x), padded(dt), A, padded(B), padded(C),
+                         chunk=chunk, impl=impl,
+                         in_scale=(padded(in_scale)
+                                   if in_scale is not None else None))
+        return y[:, :s], hf
+    if impl in ("pallas", "interpret"):
+        return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                               interpret=(impl == "interpret"),
+                               in_scale=in_scale)
+    sc = dt if in_scale is None else in_scale
+    if impl == "chunked":
+        fn = lambda xx, dd, ss, bb, cc: reference_ssd_chunked(
+            xx, dd, A, bb, cc, chunk=min(chunk, xx.shape[0]), in_scale=ss)
+        return jax.vmap(fn)(x, dt, sc, B, C)
+    if impl == "ref":
+        fn = lambda xx, dd, ss, bb, cc: reference_ssd(xx, dd, A, bb, cc,
+                                                      in_scale=ss)
+        return jax.vmap(fn)(x, dt, sc, B, C)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (scalar-decay state space) scan.
+
+Recurrence per head (state h in R^{N x P}):
+
+    a_t = exp(-softplus-free A * dt_t)          A > 0 per head
+    h_t = a_t * h_{t-1} + dt_t * (B_t outer x_t)
+    y_t = C_t^T h_t
+
+``reference_ssd`` is the literal per-timestep ``lax.scan`` — the allclose
+ground truth.  ``reference_ssd_chunked`` is the chunkwise reformulation the
+Pallas kernel implements (intra-chunk decay matrix + carried inter-chunk
+state); it is also the CPU/dry-run fallback because its HLO — a (S/Q)-step
+scan over (Q,Q) blocks — has the kernel's memory footprint.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reference_ssd", "reference_ssd_chunked"]
+
+
+def reference_ssd(x, dt, A, B, C, h0=None, in_scale=None):
+    """x: (S, H, P); dt: (S, H); A: (H,) (>0); B, C: (S, G, N) with H % G == 0.
+
+    ``in_scale`` (S, H) optionally decouples the input gate from the decay
+    (mLSTM's i_t vs f_t); default is the Mamba tying in_scale = dt.
+    Returns y: (S, H, P), h_final: (H, N, P).  fp32 throughout.
+    """
+    s, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    heads_per_group = h // g
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    sc = dt if in_scale is None else in_scale.astype(jnp.float32)
+    Bh = jnp.repeat(B.astype(jnp.float32), heads_per_group, axis=1)  # (S,H,N)
+    Ch = jnp.repeat(C.astype(jnp.float32), heads_per_group, axis=1)
+    a = jnp.exp(-A[None, :].astype(jnp.float32) * dt)                # (S, H)
+
+    def step(hstate, inp):
+        xt, st, at, bt, ct = inp
+        hstate = at[:, None, None] * hstate + (st[:, None] * bt)[..., None] * xt[:, None, :]
+        y = jnp.einsum("hn,hnp->hp", ct, hstate)
+        return hstate, y
+
+    init = jnp.zeros((h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    hf, y = jax.lax.scan(step, init, (x, sc, a, Bh, Ch))
+    return y, hf
+
+
+def reference_ssd_chunked(x, dt, A, B, C, h0=None, chunk: int = 64,
+                          in_scale=None):
+    """Chunkwise SSD (the kernel's algorithm) in pure jnp."""
+    s, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    if s % chunk:
+        raise ValueError("S must divide the chunk size")
+    heads_per_group = h // g
+    nc = s // chunk
+    sc = dt if in_scale is None else in_scale
+    x = x.astype(jnp.float32).reshape(nc, chunk, h, p)
+    dt_r = dt.astype(jnp.float32).reshape(nc, chunk, h)
+    sc = sc.astype(jnp.float32).reshape(nc, chunk, h)
+    Bh = jnp.repeat(B.astype(jnp.float32), heads_per_group, axis=1).reshape(nc, chunk, h, n)
+    Ch = jnp.repeat(C.astype(jnp.float32), heads_per_group, axis=1).reshape(nc, chunk, h, n)
+    loga_all = (-A[None, :].astype(jnp.float32) * dt.reshape(s, h).astype(jnp.float32)).reshape(nc, chunk, h)
+
+    def chunk_step(hstate, inp):
+        xc, dtc, bc, cc, loga = inp            # (Q,H,P) (Q,H) (Q,H,N) ...
+        la = jnp.cumsum(loga, axis=0)          # inclusive (Q, H)
+        # decay matrix L[i, j] = prod_{j < t <= i} a_t
+        L = jnp.exp(la[:, None, :] - la[None, :, :])          # (Q, Q, H)
+        L = jnp.where(jnp.tril(jnp.ones((chunk, chunk), bool))[..., None], L, 0.0)
+        scores = jnp.einsum("ihn,jhn->ijh", cc, bc) * L       # (Q, Q, H)
+        dx = dtc[..., None] * xc                              # (Q, H, P)
+        y_intra = jnp.einsum("ijh,jhp->ihp", scores, dx)
+        y_inter = jnp.exp(la)[..., None] * jnp.einsum("ihn,hnp->ihp", cc, hstate)
+        # state: h_out = exp(la_last) * h_in + sum_j exp(la_last - la_j) B_j dx_j
+        w = jnp.exp(la[-1][None] - la)                        # (Q, H)
+        h_new = jnp.exp(la[-1])[:, None, None] * hstate + jnp.einsum(
+            "jhn,jhp->hnp", bc * w[..., None], dx)
+        return h_new, y_intra + y_inter
+
+    init = jnp.zeros((h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    hf, y = jax.lax.scan(chunk_step, init, (x, sc, Bh, Ch, loga_all))
+    return y.reshape(s, h, p), hf

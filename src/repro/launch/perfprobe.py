@@ -1,0 +1,125 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Perf-iteration probe: lower one cell, print the three roofline terms and
+# the top cost-contributing HLO computations (bytes x loop-trips), so each
+# hypothesis -> change -> measure cycle in EXPERIMENTS.md §Perf has a
+# profile to reason from.
+#
+#   PYTHONPATH=src python -m repro.launch.perfprobe --arch qwen3-32b \
+#       --shape train_4k [--top 8] [--rules act_seq=model ...]
+
+import argparse      # noqa: E402
+import collections   # noqa: E402
+import re            # noqa: E402
+
+import jax           # noqa: E402
+
+from ..utils.hlo import (_SKIP_BYTES_OPS, _TRIP_RE, _parse_computations,  # noqa: E402
+                         _shape_bytes, analyze_hlo)
+from .dryrun import lower_cell  # noqa: E402
+from .roofline import roofline_from_cost  # noqa: E402
+
+
+def comp_weights(txt, metric="bytes"):
+    comps = _parse_computations(txt)
+    slicing = {"dynamic-slice", "gather", "slice"}
+
+    def raw(name):
+        instrs = comps[name]
+        symtab = {i.name: i.type_str for i in instrs}
+        total = 0.0
+        for ins in instrs:
+            if ins.op in _SKIP_BYTES_OPS or ins.op == "while":
+                continue
+            res = _shape_bytes(ins.type_str)
+            args = [a for a in re.findall(r"%([\w.\-]+)",
+                                          ins.rest.split("), ")[0])
+                    if a in symtab]
+            if ins.op in slicing:
+                b = 2 * res
+            elif ins.op == "dynamic-update-slice":
+                b = 2 * (_shape_bytes(symtab[args[1]]) if len(args) > 1
+                         else res)
+            else:
+                b = res + sum(_shape_bytes(symtab[a]) for a in args)
+            total += b
+        return total
+
+    entry = None
+    for line in txt.splitlines():
+        if line.strip().startswith("ENTRY"):
+            entry = re.match(r"\s*ENTRY\s+%?([\w.\-]+)", line).group(1)
+            break
+    mult = collections.defaultdict(float)
+
+    def walk(name, f):
+        mult[name] += f
+        for ins in comps.get(name, []):
+            if ins.op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mt = _TRIP_RE.search(ins.rest)
+                t = float(mt.group(1)) if mt else 1.0
+                if body:
+                    walk(body.group(1), f * t)
+            else:
+                for sub in re.findall(
+                        r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-]+)",
+                        ins.rest):
+                    if sub in comps:
+                        walk(sub, f)
+
+    walk(entry, 1.0)
+    rows = sorted(((raw(n) * mult[n], mult[n], n) for n in comps
+                   if n in mult), reverse=True)
+    return rows
+
+
+def biggest_instrs(txt, comp_name, topn=10):
+    comps = _parse_computations(txt)
+    instrs = comps[comp_name]
+    symtab = {i.name: i.type_str for i in instrs}
+    items = []
+    for ins in instrs:
+        if ins.op in _SKIP_BYTES_OPS or ins.op == "while":
+            continue
+        b = _shape_bytes(ins.type_str)
+        items.append((b, ins.op, ins.name, ins.type_str[:70]))
+    items.sort(reverse=True)
+    return items[:topn]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--top", type=int, default=8)
+    ap.add_argument("--detail", type=int, default=0,
+                    help="print N biggest result tensors of the top bodies")
+    args = ap.parse_args()
+
+    rec, txt = lower_cell(args.arch, args.shape, args.multi, return_text=True)
+    if rec["status"] != "ok":
+        print(rec)
+        return 1
+    r = rec["roofline"]
+    print(f"== {args.arch} {args.shape} {'multi' if args.multi else 'single'} ==")
+    print(f"compute {r['compute_s']:.3f}s | memory {r['memory_s']:.3f}s | "
+          f"collective {r['collective_s']:.3f}s | dom={r['dominant']} | "
+          f"mfu_bound={r['mfu_bound']:.4f} | ratio={r['model_flops_ratio']:.3f}")
+    print(f"mem/dev: {rec['memory']['peak_estimate_bytes']/2**30:.2f} GiB  "
+          f"colls: { {k: int(v) for k, v in rec['hlo_cost']['collective_counts'].items()} }")
+    print(f"coll GB: { {k: round(v/1e9, 1) for k, v in rec['hlo_cost']['collective_bytes_by_kind'].items()} }")
+    print("\ntop computations (bytes x trips):")
+    rows = comp_weights(txt)
+    for total, mult, name in rows[: args.top]:
+        print(f"  {total:11.3e}  x{mult:7.0f}  {name}")
+        if args.detail:
+            for b, op, nm, ty in biggest_instrs(txt, name, args.detail):
+                print(f"      {b:10.2e} {op:24s} {ty}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,141 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw             [s]
+    collective term = collective_bytes_per_device / link_bw     [s]
+
+Sources: FLOPs and bytes come from :mod:`repro.utils.hlo` (the trip-count-
+aware analyzer — XLA's ``cost_analysis`` counts scan bodies once, which would
+undercount a 64-layer model by 64x; the XLA numbers are recorded alongside
+for transparency).  The per-device HLO module is what ``compiled.as_text()``
+returns under SPMD, so all three terms are already per-chip.
+
+Ring-factor convention: payload bytes are reported raw; all-reduce wire
+traffic on a bidirectional ring is 2(n-1)/n ~= 2x payload, all-gather /
+reduce-scatter (n-1)/n ~= 1x, all-to-all (n-1)/n, collective-permute 1x.
+``collective_seconds`` applies those factors per collective kind against the
+per-chip link bandwidth.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (3D-torus links are shared across axes; we charge the single-link rate —
+conservative).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..utils.hlo import HloCost
+
+__all__ = ["HW", "Roofline", "roofline_from_cost", "MODEL_FLOPS_NOTE"]
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+# wire-traffic multiplier per payload byte, bidirectional-ring model
+_RING_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+MODEL_FLOPS_NOTE = (
+    "MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference); the "
+    "ratio MODEL_FLOPS / (HLO_FLOPs x chips) measures how much compiled "
+    "compute is useful — remat recompute, attention quadratic work and "
+    "dispatch overhead push it below 1."
+)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float
+    chips: int
+    memory_s_raw: float = 0.0        # uncorrected (CPU-legalized f32) term
+    collective_s_raw: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        """Perfect-overlap bound: the max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        total_hlo = self.flops_per_device * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline-implied MFU: useful FLOPs / (chips x peak x bound time)."""
+        t = self.step_time_lower_bound_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "memory_s_raw": self.memory_s_raw,
+            "collective_s_raw": self.collective_s_raw,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops,
+            "model_flops_ratio": self.model_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "step_lower_bound_s": self.step_time_lower_bound_s,
+            "chips": self.chips,
+        }
+
+
+def collective_seconds(cost: HloCost, link_bw: float = ICI_BW,
+                       bf16eq: bool = True) -> float:
+    total = (cost.collective_bytes_bf16eq if bf16eq
+             else cost.collective_bytes)
+    if cost.collective_bytes <= 0:
+        return 0.0
+    scale = total / cost.collective_bytes
+    t = 0.0
+    for kind, byts in cost.collective_bytes_by_kind.items():
+        t += _RING_FACTOR.get(kind, 1.0) * byts * scale / link_bw
+    return t
+
+
+def roofline_from_cost(cost: HloCost, chips: int, model_flops: float) -> Roofline:
+    """Primary terms use the bf16-equivalent byte counts (the TPU target;
+    XLA:CPU legalizes bf16 math/collectives to f32 — see utils.hlo); the
+    raw CPU-lowering terms are carried alongside for transparency."""
+    return Roofline(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes_bf16eq / HBM_BW,
+        collective_s=collective_seconds(cost, bf16eq=True),
+        memory_s_raw=cost.bytes_accessed / HBM_BW,
+        collective_s_raw=collective_seconds(cost, bf16eq=False),
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes_bf16eq,
+        collective_bytes_per_device=cost.collective_bytes_bf16eq,
+        model_flops=model_flops,
+        chips=chips,
+    )

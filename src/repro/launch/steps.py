@@ -1,0 +1,170 @@
+"""Jitted train / prefill / decode step builders with full sharding specs.
+
+``make_train_step`` assembles the production step: microbatch gradient
+accumulation (lax.scan keeps HLO O(1) in the microbatch count), fp32
+gradient accumulators, global-norm clipping, AdamW with FSDP-sharded
+moments (they inherit parameter sharding), LR schedule.  The same builder
+serves real training (examples/train_lm.py) and the dry-run (lowered against
+ShapeDtypeStructs).
+
+Sharding derivation: parameter shardings come from the model's logical axes
+via ``parallel.sharding``; optimizer state mirrors parameter shardings
+(ZeRO); batch inputs shard their leading dim over (pod, data).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .. import optim
+from ..configs.base import TrainConfig
+from ..models.model import Model
+from ..parallel.sharding import resolve_axes, sharding_for, tree_shardings
+
+__all__ = [
+    "param_shardings", "batch_shardings", "opt_shardings", "cache_shardings",
+    "make_train_fn", "make_optimizer", "make_train_step", "make_prefill_step",
+    "make_decode_step",
+]
+
+
+def _tree_shardings(axes_tree, shapes_tree, mesh):
+    return jax.tree.map(
+        lambda ax, shp: sharding_for(ax, shp.shape, mesh),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def param_shardings(model: Model, mesh):
+    shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    return _tree_shardings(model.param_axes(), shapes, mesh)
+
+
+def batch_shardings(specs, axes, mesh):
+    return jax.tree.map(
+        lambda ax, shp: sharding_for(ax, shp.shape, mesh),
+        axes, specs,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def cache_shardings(model: Model, mesh, batch: int, max_len: int):
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(batch, max_len))
+    return _tree_shardings(model.cache_axes(), shapes, mesh)
+
+
+def opt_shardings(optimizer, model: Model, mesh, params_shapes=None):
+    if params_shapes is None:
+        params_shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    p_sh = param_shardings(model, mesh)
+    state_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    rep = NamedSharding(mesh, P())
+
+    def mirror(shapes, template_sh):
+        if shapes is None:
+            return None
+        return jax.tree.map(lambda _, sh: sh, shapes, template_sh)
+
+    return optim.OptState(
+        step=rep,
+        mu=mirror(state_shapes.mu, p_sh),
+        nu=mirror(state_shapes.nu, p_sh),
+        master=mirror(state_shapes.master, p_sh),
+    )
+
+
+def make_optimizer(tcfg: TrainConfig):
+    return optim.adamw(
+        lr=optim.warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps),
+        weight_decay=tcfg.weight_decay,
+        master_fp32=tcfg.master_fp32,
+    )
+
+
+def make_train_fn(model: Model, tcfg: TrainConfig, optimizer):
+    """The pure (params, opt_state, batch) -> (params, opt_state, metrics)."""
+    M = tcfg.microbatches
+
+    def train_step(params, opt_state, batch):
+        if M > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]), batch)
+
+            def body(acc, mb):
+                loss, grads = jax.value_and_grad(model.loss)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, loss
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(body, zero, mbs)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+
+        grads, gnorm = optim.clip_by_global_norm(grads, tcfg.max_grad_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_train_step(model: Model, mesh, tcfg: TrainConfig, specs, axes,
+                    donate: bool = True):
+    """Fully-sharded jitted train step + its input shardings.
+
+    Returns (jitted_fn, (p_sh, o_sh, b_sh)).
+    """
+    optimizer = make_optimizer(tcfg)
+    fn = make_train_fn(model, tcfg, optimizer)
+    p_sh = param_shardings(model, mesh)
+    o_sh = opt_shardings(optimizer, model, mesh)
+    b_sh = batch_shardings(specs, axes, mesh)
+    rep = NamedSharding(mesh, P())
+    jfn = jax.jit(
+        fn,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, rep),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jfn, (p_sh, o_sh, b_sh), optimizer
+
+
+def make_prefill_step(model: Model, mesh, specs, axes):
+    p_sh = param_shardings(model, mesh)
+    b_sh = batch_shardings(specs, axes, mesh)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    jfn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+    return jfn, (p_sh, b_sh)
+
+
+def make_decode_step(model: Model, mesh, batch: int, max_len: int,
+                     donate: bool = True):
+    p_sh = param_shardings(model, mesh)
+    c_sh = cache_shardings(model, mesh, batch, max_len)
+    rep = NamedSharding(mesh, P())
+    tok_sh = sharding_for(("batch", None), (batch, 1), mesh)
+
+    def decode(params, token, cache, kv_len):
+        return model.decode_step(params, token, cache, kv_len)
+
+    jfn = jax.jit(
+        decode,
+        in_shardings=(p_sh, tok_sh, c_sh, rep),
+        out_shardings=(None, c_sh),
+        donate_argnums=(2,) if donate else (),
+    )
+    return jfn, (p_sh, tok_sh, c_sh)

@@ -1,0 +1,2 @@
+from .model import build_model, Model  # noqa: F401
+from .common import split_annotated, Annotated  # noqa: F401

@@ -1,0 +1,317 @@
+"""Attention variants: GQA (+ per-head qk RMS norm) and MLA, with self/cross
+and train/prefill/decode paths.
+
+Layout conventions:
+
+* activations: (B, S, d_model);
+* projected heads: (B, S, H, Dh) — flash kernel consumes (B, H, S, Dh);
+* KV cache: {"k": (B, Smax, Hkv, Dh), "v": ...} with a scalar ``kv_len``
+  marking the filled prefix (uniform across the batch — continuous batching
+  lives a level up in the serving loop);
+* MLA caches the *compressed* latents {"ckv": (B, Smax, kv_lora),
+  "krope": (B, Smax, rope_dim)} — the whole point of MLA is that decode
+  reads kv_lora + rope bytes/token instead of 2*H*Dh.  Decode uses the
+  absorbed-matmul formulation (q_nope projected through W_uk so scores
+  contract against the latent cache directly); train/prefill materializes
+  per-head K/V and runs the flash kernel.
+
+Parameter init functions return plain value pytrees; the matching
+``*_axes`` functions return the logical-sharding pytrees (same structure).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash.ops import decode_attention, flash_attention
+from ..parallel.sharding import constrain
+from . import flags
+from .common import apply_rotary, rms_norm, rotary_embedding
+
+__all__ = [
+    "init_gqa", "gqa_axes", "gqa_forward", "init_gqa_cache", "gqa_cache_axes",
+    "init_mla", "mla_axes", "mla_forward", "init_mla_cache", "mla_cache_axes",
+]
+
+
+# --------------------------------------------------------------------- #
+# GQA
+# --------------------------------------------------------------------- #
+def init_gqa(key, cfg, cross: bool = False):
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    # per-head 3D layouts ("head_sharded_layouts" flag): the sharding
+    # resolver then gates on the HEAD COUNT (kv=8 on a 16-way model axis ->
+    # replicated k/v weights, zero dx all-reduce for those projections)
+    # instead of the flattened dim (kv*dh=1024 divides 16 -> mid-head shards
+    # that force reshards inside the attention loops).
+    # adaptive: 3D layouts only pay off when q-heads split evenly across
+    # the production TP width (40-head qwen3-14b would replicate its whole
+    # q projection -> 6x redundant compute, measured)
+    if flags.get("head_sharded_layouts") and h % 16 == 0:
+        p = {
+            "wq": (jax.random.normal(ks[0], (d, h, dh)) * std).astype(dt),
+            "wk": (jax.random.normal(ks[1], (d, kv, dh)) * std).astype(dt),
+            "wv": (jax.random.normal(ks[2], (d, kv, dh)) * std).astype(dt),
+            "wo": (jax.random.normal(ks[3], (h, dh, d))
+                   * (h * dh) ** -0.5).astype(dt),
+        }
+    else:
+        p = {
+            "wq": (jax.random.normal(ks[0], (d, h * dh)) * std).astype(dt),
+            "wk": (jax.random.normal(ks[1], (d, kv * dh)) * std).astype(dt),
+            "wv": (jax.random.normal(ks[2], (d, kv * dh)) * std).astype(dt),
+            "wo": (jax.random.normal(ks[3], (h * dh, d))
+                   * (h * dh) ** -0.5).astype(dt),
+        }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def gqa_axes(cfg, cross: bool = False):
+    if flags.get("head_sharded_layouts") and cfg.n_heads % 16 == 0:
+        ax = {
+            "wq": ("embed", "heads", None),
+            "wk": ("embed", "kv_heads", None),
+            "wv": ("embed", "kv_heads", None),
+            "wo": ("heads", None, "embed"),
+        }
+    else:
+        ax = {
+            "wq": ("embed", "heads"),
+            "wk": ("embed", "kv_heads"),
+            "wv": ("embed", "kv_heads"),
+            "wo": ("heads", "embed"),
+        }
+    if cfg.qk_norm:
+        ax["q_norm"] = (None,)
+        ax["k_norm"] = (None,)
+    return ax
+
+
+def _project_qkv(p, cfg, x, src):
+    """(q, k, v) head projections under either weight layout."""
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    if p["wq"].ndim == 3:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+        return q, k, v
+    q = _split_heads(x @ p["wq"], h, dh)
+    k = _split_heads(src @ p["wk"], kv, dh)
+    v = _split_heads(src @ p["wv"], kv, dh)
+    return q, k, v
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int):
+    dh = cfg.resolved_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shape = (batch, max_len, cfg.n_kv_heads, dh)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def gqa_cache_axes(cfg):
+    ax = ("batch", "cache_seq", "cache_heads", None)
+    return {"k": ax, "v": ax}
+
+
+def _split_heads(x, n, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def gqa_forward(p, cfg, x, positions, *, mode: str = "train", cache=None,
+                kv_len=None, kv_source=None, causal: bool = True,
+                attn_impl: str | None = None):
+    """mode: train|prefill (full seq) or decode (single step, cache required).
+
+    kv_source: cross-attention keys/values come from this (B, Skv, d) tensor
+    (whisper decoder); positions then index only the queries.
+    Returns (out, new_cache).
+    """
+    d, h, kv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    b, s, _ = x.shape
+
+    if mode == "cross_cached":
+        # decode-time cross attention against K/V projected once at prefill
+        if p["wq"].ndim == 3:
+            q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        else:
+            q = _split_heads(x @ p["wq"], h, dh)
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), cache["k"].transpose(0, 2, 1, 3),
+            cache["v"].transpose(0, 2, 1, 3), causal=False, impl="ref",
+        ).transpose(0, 2, 1, 3)
+        if p["wo"].ndim == 3:
+            return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+        return out.reshape(b, s, h * dh) @ p["wo"], None
+
+    src = x if kv_source is None else kv_source
+    q, k, v = _project_qkv(p, cfg, x, src)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    use_rope = kv_source is None  # cross-attn (whisper) skips rope
+    if use_rope:
+        cos_q, sin_q = rotary_embedding(positions, dh, cfg.rope_theta)
+        q = apply_rotary(q, cos_q, sin_q)
+        k = apply_rotary(k, cos_q, sin_q)
+
+    q = constrain(q, ("batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("batch", "act_seq", "cache_heads", None))
+
+    if mode == "decode":
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, kv_len, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, kv_len, 1),
+        }
+        out = decode_attention(
+            q.transpose(0, 2, 1, 3),
+            new_cache["k"].transpose(0, 2, 1, 3),
+            new_cache["v"].transpose(0, 2, 1, 3),
+            kv_len + s,
+        ).transpose(0, 2, 1, 3)
+    else:
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal and kv_source is None,
+            impl=attn_impl,
+        ).transpose(0, 2, 1, 3)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}       # caller pads/places into cache
+
+    if p["wo"].ndim == 3:
+        out = constrain(out, ("batch", "act_seq", "act_heads", None))
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+    out = out.reshape(b, s, h * dh)
+    out = constrain(out, ("batch", "act_seq", "act_heads"))
+    return out @ p["wo"], new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLA (DeepSeek-V2 / MiniCPM3 style)
+# --------------------------------------------------------------------- #
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 6)
+
+    def lin(k_, shape, fan):
+        return (jax.random.normal(k_, shape) * fan ** -0.5).astype(dt)
+
+    return {
+        "wq_a": lin(ks[0], (d, qr), d),
+        "q_norm": jnp.ones((qr,), jnp.float32),
+        "wq_b": lin(ks[1], (qr, h * (dn + dr)), qr),
+        "wkv_a": lin(ks[2], (d, kvr + dr), d),
+        "kv_norm": jnp.ones((kvr,), jnp.float32),
+        "wk_b": lin(ks[3], (kvr, h * dn), kvr),
+        "wv_b": lin(ks[4], (kvr, h * dv), kvr),
+        "wo": lin(ks[5], (h * dv, d), h * dv),
+    }
+
+
+def mla_axes(cfg):
+    return {
+        "wq_a": ("embed", None),
+        "q_norm": (None,),
+        "wq_b": (None, "heads"),
+        "wkv_a": ("embed", None),
+        "kv_norm": (None,),
+        "wk_b": (None, "heads"),
+        "wv_b": (None, "heads"),
+        "wo": ("heads", "embed"),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_len: int):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dt),
+    }
+
+
+def mla_cache_axes(cfg):
+    return {"ckv": ("batch", "cache_seq", None),
+            "krope": ("batch", "cache_seq", None)}
+
+
+def _mla_project_q(p, cfg, x, positions):
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    b, s, _ = x.shape
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rotary_embedding(positions, dr, cfg.rope_theta)
+    q_rope = apply_rotary(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_forward(p, cfg, x, positions, *, mode: str = "train", cache=None,
+                kv_len=None, attn_impl: str | None = None):
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    b, s, _ = x.shape
+
+    q_nope, q_rope = _mla_project_q(p, cfg, x, positions)
+    kv = x @ p["wkv_a"]
+    ckv = rms_norm(kv[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., kvr:]
+    cos, sin = rotary_embedding(positions, dr, cfg.rope_theta)
+    k_rope = apply_rotary(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if mode == "decode":
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, kv_len, 1),
+            "krope": jax.lax.dynamic_update_slice_in_dim(cache["krope"], k_rope, kv_len, 1),
+        }
+        # absorbed scores: q_nope (b,s,h,dn) @ wk_b^T -> latent queries
+        wk_b = p["wk_b"].reshape(kvr, h, dn)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                           wk_b.astype(jnp.float32))            # (b,s,h,kvr)
+        ck = new_cache["ckv"].astype(jnp.float32)               # (b,S,kvr)
+        kr = new_cache["krope"].astype(jnp.float32)             # (b,S,dr)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_lat, ck)
+            + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32), kr)
+        ) / jnp.sqrt(dn + dr)
+        valid = jnp.arange(ck.shape[1])[None, None, None, :] < (kv_len + s)
+        scores = jnp.where(valid, scores, -jnp.inf)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", attn, ck)            # latent ctx
+        wv_b = p["wv_b"].reshape(kvr, h, dv)
+        out = jnp.einsum("bshr,rhv->bshv", ctx, wv_b.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        # materialized path: per-head K from latents, flash kernel
+        k_nope = (ckv @ p["wk_b"]).reshape(b, s, h, dn)
+        v = (ckv @ p["wv_b"]).reshape(b, s, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, impl=attn_impl,
+            scale=float((dn + dr) ** -0.5),
+        ).transpose(0, 2, 1, 3)
+        new_cache = {"ckv": ckv, "krope": k_rope} if mode == "prefill" else None
+
+    out = out.reshape(b, s, h * dv)
+    return out @ p["wo"], new_cache

@@ -1,0 +1,184 @@
+"""Residual block assembly keyed by pattern tokens.
+
+Tokens (``ModelConfig.block_pattern``):
+
+* ``a`` — pre-norm attention (+ MoE FFN when cfg.moe is set, else SwiGLU);
+* ``A`` — same block with SHARED parameters across all call sites (zamba2);
+* ``m`` — Mamba-2 block;
+* ``x`` — mLSTM block;
+* ``s`` — sLSTM block;
+* ``e`` — encoder block (bidirectional attention, GELU-free SwiGLU FFN);
+* ``c`` — decoder block with cross-attention (whisper).
+
+Every block is (init, axes, forward, cache-init, cache-axes) keyed by token,
+so the LM assembler can stack/scan homogeneous runs and interleave
+heterogeneous patterns without special cases.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mlp as mlp_mod
+from . import ssm
+from .common import rms_norm
+
+__all__ = ["init_block", "block_axes", "block_forward", "init_block_cache",
+           "block_cache_axes", "block_has_cache"]
+
+
+def _is_attn(tok: str) -> bool:
+    return tok in ("a", "A", "e", "c")
+
+
+def init_block(key, cfg, tok: str):
+    ks = jax.random.split(key, 4)
+    if _is_attn(tok):
+        use_mla = cfg.attention == "mla" and tok in ("a", "A")
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": (attn.init_mla(ks[0], cfg) if use_mla
+                     else attn.init_gqa(ks[0], cfg)),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": (mlp_mod.init_moe(ks[1], cfg) if cfg.moe and tok != "c"
+                    and tok != "e"
+                    else mlp_mod.init_mlp(ks[1], cfg)),
+        }
+        if tok == "c":
+            p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+            p["cross"] = attn.init_gqa(ks[2], cfg, cross=True)
+        return p
+    ln = jnp.ones((cfg.d_model,), jnp.float32)
+    if tok == "m":
+        return {"ln": ln, "mamba": ssm.init_mamba2(ks[0], cfg)}
+    if tok == "x":
+        return {"ln": ln, "mlstm": ssm.init_mlstm(ks[0], cfg)}
+    if tok == "s":
+        return {"ln": ln, "slstm": ssm.init_slstm(ks[0], cfg)}
+    raise ValueError(f"unknown block token {tok!r}")
+
+
+def block_axes(cfg, tok: str):
+    if _is_attn(tok):
+        use_mla = cfg.attention == "mla" and tok in ("a", "A")
+        ax = {
+            "ln1": (None,),
+            "attn": attn.mla_axes(cfg) if use_mla else attn.gqa_axes(cfg),
+            "ln2": (None,),
+            "mlp": (mlp_mod.moe_axes(cfg) if cfg.moe and tok not in ("c", "e")
+                    else mlp_mod.mlp_axes(cfg)),
+        }
+        if tok == "c":
+            ax["ln_x"] = (None,)
+            ax["cross"] = attn.gqa_axes(cfg, cross=True)
+        return ax
+    if tok == "m":
+        return {"ln": (None,), "mamba": ssm.mamba2_axes(cfg)}
+    if tok == "x":
+        return {"ln": (None,), "mlstm": ssm.mlstm_axes(cfg)}
+    if tok == "s":
+        return {"ln": (None,), "slstm": ssm.slstm_axes(cfg)}
+    raise ValueError(tok)
+
+
+def block_has_cache(tok: str) -> bool:
+    return True
+
+
+def init_block_cache(cfg, tok: str, batch: int, max_len: int):
+    if _is_attn(tok):
+        use_mla = cfg.attention == "mla" and tok in ("a", "A")
+        c = (attn.init_mla_cache(cfg, batch, max_len) if use_mla
+             else attn.init_gqa_cache(cfg, batch, max_len))
+        if tok == "c":
+            dh = cfg.resolved_head_dim
+            dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+            shape = (batch, cfg.encoder_seq, cfg.n_kv_heads, dh)
+            c = {"self": c, "cross_k": jnp.zeros(shape, dt),
+                 "cross_v": jnp.zeros(shape, dt)}
+        return c
+    if tok == "m":
+        return ssm.init_mamba2_cache(cfg, batch, max_len)
+    if tok == "x":
+        return ssm.init_mlstm_cache(cfg, batch, max_len)
+    if tok == "s":
+        return ssm.init_slstm_cache(cfg, batch, max_len)
+    raise ValueError(tok)
+
+
+def block_cache_axes(cfg, tok: str):
+    if _is_attn(tok):
+        use_mla = cfg.attention == "mla" and tok in ("a", "A")
+        ax = attn.mla_cache_axes(cfg) if use_mla else attn.gqa_cache_axes(cfg)
+        if tok == "c":
+            kv_ax = ("batch", None, "cache_heads", None)
+            ax = {"self": ax, "cross_k": kv_ax, "cross_v": kv_ax}
+        return ax
+    if tok == "m":
+        return ssm.mamba2_cache_axes(cfg)
+    if tok == "x":
+        return ssm.mlstm_cache_axes(cfg)
+    if tok == "s":
+        return ssm.slstm_cache_axes(cfg)
+    raise ValueError(tok)
+
+
+def block_forward(p, cfg, tok: str, x, positions, *, mode: str = "train",
+                  cache=None, kv_len=None, enc_out=None,
+                  attn_impl=None, ssd_impl=None):
+    """Apply one residual block.  Returns (x, new_cache)."""
+    if _is_attn(tok):
+        use_mla = cfg.attention == "mla" and tok in ("a", "A")
+        self_cache = cache["self"] if tok == "c" and cache is not None else cache
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if use_mla:
+            out, nc = attn.mla_forward(p["attn"], cfg, h, positions, mode=mode,
+                                       cache=self_cache, kv_len=kv_len,
+                                       attn_impl=attn_impl)
+        else:
+            out, nc = attn.gqa_forward(p["attn"], cfg, h, positions, mode=mode,
+                                       cache=self_cache, kv_len=kv_len,
+                                       causal=(tok != "e"),
+                                       attn_impl=attn_impl)
+        x = x + out
+        new_cache = nc
+        if tok == "c":
+            hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            if mode == "decode":
+                # cross K/V were projected once at prefill and cached
+                qout, _ = attn.gqa_forward(
+                    p["cross"], cfg, hx, positions, mode="cross_cached",
+                    cache={"k": cache["cross_k"], "v": cache["cross_v"]},
+                    attn_impl=attn_impl)
+            else:
+                qout, cross_kv = attn.gqa_forward(
+                    p["cross"], cfg, hx, positions, mode="prefill",
+                    kv_source=enc_out, attn_impl=attn_impl)
+            x = x + qout
+            if mode == "decode":
+                new_cache = {"self": nc, "cross_k": cache["cross_k"],
+                             "cross_v": cache["cross_v"]}
+            elif mode == "prefill":
+                new_cache = {"self": nc, "cross_k": cross_kv["k"],
+                             "cross_v": cross_kv["v"]}
+        hm = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe and tok not in ("c", "e"):
+            x = x + mlp_mod.moe_forward(p["mlp"], cfg, hm)
+        else:
+            x = x + mlp_mod.mlp_forward(p["mlp"], hm)
+        return x, new_cache
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if tok == "m":
+        out, nc = ssm.mamba2_forward(p["mamba"], cfg, h, mode=mode,
+                                     cache=cache, ssd_impl=ssd_impl)
+    elif tok == "x":
+        out, nc = ssm.mlstm_forward(p["mlstm"], cfg, h, mode=mode,
+                                    cache=cache, ssd_impl=ssd_impl)
+    elif tok == "s":
+        out, nc = ssm.slstm_forward(p["slstm"], cfg, h, mode=mode, cache=cache)
+    else:
+        raise ValueError(tok)
+    return x + out, nc

@@ -1,0 +1,44 @@
+"""Model-level performance variants (perf-iteration knobs).
+
+Each flag selects between the paper-faithful/naive formulation and a
+beyond-paper optimized one, so EXPERIMENTS.md §Perf can lower both variants
+of a cell under the same analyzer and report the delta.
+
+* ``head_sharded_layouts`` — 3D (d, H, Dh) projection weights so sharding
+  is decided per whole head: kv_heads < model shards replicate cleanly (dx
+  for k/v needs NO tensor-parallel all-reduce, and attention layouts stop
+  resharding mid-head).  Measured: the dominant collective on dense train
+  cells was a 3-tensor dx all-reduce tuple; this removes 2 of the 3.
+* ``fused_w13``  — one (d, 2, f) gate+up projection (dense MLP): halves the
+  MLP backward dx all-reduce payload (one dot instead of two).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_FLAGS = {
+    "head_sharded_layouts": True,
+    "fused_w13": True,
+}
+
+
+def get(name: str) -> bool:
+    return _FLAGS[name]
+
+
+def set_flag(name: str, value: bool) -> None:
+    if name not in _FLAGS:
+        raise KeyError(name)
+    _FLAGS[name] = bool(value)
+
+
+@contextlib.contextmanager
+def flags(**kw):
+    old = dict(_FLAGS)
+    for k, v in kw.items():
+        set_flag(k, v)
+    try:
+        yield
+    finally:
+        _FLAGS.update(old)

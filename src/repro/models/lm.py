@@ -1,0 +1,304 @@
+"""Decoder-only LM assembly with scan-over-layers and hybrid patterns.
+
+The layer pattern (``cfg.pattern()``) is decomposed as
+
+    pattern = unit * n_full + tail,   unit = cfg.block_pattern or "a"
+
+and the ``n_full`` unit repetitions run under one ``jax.lax.scan`` whose xs
+are the *stacked* unit parameters (leading dim n_full) — HLO size stays O(1)
+in depth, which is what keeps the 94-layer qwen3-moe compile at seconds.
+Shared-weight blocks (token "A", zamba2) are excluded from the stack: their
+single parameter set rides in the scan closure while their per-call-site KV
+caches stay stacked like everything else.  The tail (< one unit) unrolls.
+
+Activation remat wraps each unit body (``cfg`` TrainConfig.remat), the
+standard memory/compute trade at 4k x 256 batch scale.
+
+VLM (llava-next): ``patches`` (precomputed anyres tiles from the stub
+frontend) are prepended to the embedded text tokens; loss masks patch
+positions.  The same assembly serves decode with a unified cache pytree.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import blocks
+from .common import rms_norm, softmax_cross_entropy
+
+__all__ = [
+    "decompose_pattern", "init_lm", "lm_axes", "lm_forward", "lm_loss",
+    "init_lm_cache", "lm_cache_axes", "lm_decode_step", "lm_prefill",
+]
+
+
+def decompose_pattern(cfg):
+    unit = cfg.block_pattern or "a"
+    pattern = cfg.pattern()
+    n_full = len(pattern) // len(unit)
+    tail = pattern[n_full * len(unit):]
+    return unit, n_full, tail
+
+
+# --------------------------------------------------------------------- #
+# init / axes
+# --------------------------------------------------------------------- #
+def init_lm(key, cfg):
+    unit, n_full, tail = decompose_pattern(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k_embed, k_head, k_units, k_tail, k_shared = jax.random.split(key, 5)
+
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size))
+            * cfg.d_model ** -0.5).astype(dt)
+
+    if "A" in unit:
+        params["shared_attn"] = blocks.init_block(k_shared, cfg, "A")
+
+    stack = {}
+    unit_keys = jax.random.split(k_units, len(unit))
+    for i, tok in enumerate(unit):
+        if tok == "A":
+            continue
+        if n_full > 0:
+            stack[f"u{i}"] = jax.vmap(
+                lambda kk, t=tok: blocks.init_block(kk, cfg, t)
+            )(jax.random.split(unit_keys[i], n_full))
+    params["blocks"] = stack
+
+    tail_p = {}
+    tail_keys = jax.random.split(k_tail, max(len(tail), 1))
+    for i, tok in enumerate(tail):
+        tail_p[f"t{i}"] = blocks.init_block(tail_keys[i], cfg, tok)
+    params["tail"] = tail_p
+    return params
+
+
+def lm_axes(cfg):
+    unit, n_full, tail = decompose_pattern(cfg)
+    ax = {
+        "embed": ("vocab", "embed_nofsdp"),
+        "final_norm": (None,),
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("embed_nofsdp", "vocab")
+    if "A" in unit:
+        ax["shared_attn"] = blocks.block_axes(cfg, "A")
+    stack = {}
+    for i, tok in enumerate(unit):
+        if tok == "A" or n_full == 0:
+            continue
+        stack[f"u{i}"] = jax.tree.map(
+            lambda a: ("layers", *a), blocks.block_axes(cfg, tok),
+            is_leaf=lambda x: isinstance(x, tuple))
+    ax["blocks"] = stack
+    ax["tail"] = {f"t{i}": blocks.block_axes(cfg, tok)
+                  for i, tok in enumerate(tail)}
+    return ax
+
+
+# --------------------------------------------------------------------- #
+# cache
+# --------------------------------------------------------------------- #
+def init_lm_cache(cfg, batch: int, max_len: int):
+    unit, n_full, tail = decompose_pattern(cfg)
+
+    def stack_cache(tok):
+        one = blocks.init_block_cache(cfg, tok, batch, max_len)
+        return jax.tree.map(
+            lambda l: jnp.broadcast_to(l, (n_full, *l.shape)), one)
+
+    cache = {"blocks": {f"u{i}": stack_cache(tok)
+                        for i, tok in enumerate(unit) if n_full > 0},
+             "tail": {f"t{i}": blocks.init_block_cache(cfg, tok, batch, max_len)
+                      for i, tok in enumerate(tail)}}
+    return cache
+
+
+def lm_cache_axes(cfg):
+    unit, n_full, tail = decompose_pattern(cfg)
+    ax = {"blocks": {}, "tail": {}}
+    for i, tok in enumerate(unit):
+        if n_full == 0:
+            continue
+        ax["blocks"][f"u{i}"] = jax.tree.map(
+            lambda a: ("layers", *a), blocks.block_cache_axes(cfg, tok),
+            is_leaf=lambda x: isinstance(x, tuple))
+    for i, tok in enumerate(tail):
+        ax["tail"][f"t{i}"] = blocks.block_cache_axes(cfg, tok)
+    return ax
+
+
+# --------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------- #
+def _backbone(params, cfg, x, positions, *, mode, cache, kv_len, remat,
+              attn_impl, ssd_impl):
+    """Run all blocks over x.  Returns (x, new_cache_or_None)."""
+    unit, n_full, tail = decompose_pattern(cfg)
+    shared = params.get("shared_attn")
+    want_cache = mode in ("prefill", "decode")
+
+    def unit_body(x, pslice, cslice):
+        new_c = {}
+        for i, tok in enumerate(unit):
+            p = shared if tok == "A" else pslice[f"u{i}"]
+            c = cslice[f"u{i}"] if cslice is not None else None
+            x, nc = blocks.block_forward(
+                p, cfg, tok, x, positions, mode=mode, cache=c, kv_len=kv_len,
+                attn_impl=attn_impl, ssd_impl=ssd_impl)
+            if want_cache:
+                new_c[f"u{i}"] = nc
+        return x, (new_c if want_cache else None)
+
+    body = unit_body
+    if remat:
+        body = jax.checkpoint(unit_body)
+
+    new_cache = {"blocks": {}, "tail": {}}
+    if n_full > 0:
+        pstack = params["blocks"]
+        if want_cache:
+            cstack = cache["blocks"] if mode == "decode" else None
+
+            def scan_fn(x, inp):
+                ps, cs = inp
+                x, nc = body(x, ps, cs)
+                return x, nc
+
+            if mode == "decode":
+                x, ncs = jax.lax.scan(scan_fn, x, (pstack, cstack))
+            else:  # prefill: no existing cache; collect fresh
+                def scan_fn_p(x, ps):
+                    x, nc = body(x, ps, None)
+                    return x, nc
+                x, ncs = jax.lax.scan(scan_fn_p, x, pstack)
+            new_cache["blocks"] = ncs
+        else:
+            def scan_fn_t(x, ps):
+                x, _ = body(x, ps, None)
+                return x, None
+            x, _ = jax.lax.scan(scan_fn_t, x, pstack)
+
+    for i, tok in enumerate(tail):
+        c = cache["tail"][f"t{i}"] if (cache is not None and mode == "decode") else None
+        x, nc = blocks.block_forward(
+            params["tail"][f"t{i}"], cfg, tok, x, positions, mode=mode,
+            cache=c, kv_len=kv_len, attn_impl=attn_impl, ssd_impl=ssd_impl)
+        if want_cache:
+            new_cache["tail"][f"t{i}"] = nc
+
+    return x, (new_cache if want_cache else None)
+
+
+def _embed_inputs(params, cfg, batch):
+    """Token (+ optional modality stub) embedding.  Returns (x, n_prefix)."""
+    x = params["embed"][batch["tokens"]]
+    n_prefix = 0
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        n_prefix = batch["patches"].shape[1]
+    return x, n_prefix
+
+
+def _logits(params, cfg, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return constrain(logits, ("batch", "act_seq", "vocab"))
+
+
+def lm_forward(params, cfg, batch, *, mode="train", cache=None, kv_len=None,
+               remat=True, attn_impl=None, ssd_impl=None):
+    x, n_prefix = _embed_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", "act_seq", "act_embed"))
+    s = x.shape[1]
+    positions = (jnp.arange(s) if mode != "decode"
+                 else kv_len + jnp.arange(s))
+    x, new_cache = _backbone(params, cfg, x, positions, mode=mode,
+                             cache=cache, kv_len=kv_len, remat=remat,
+                             attn_impl=attn_impl, ssd_impl=ssd_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, n_prefix, new_cache
+
+
+def lm_loss(params, cfg, batch, *, remat=True, attn_impl=None, ssd_impl=None):
+    x, n_prefix, _ = lm_forward(params, cfg, batch, mode="train", remat=remat,
+                                attn_impl=attn_impl, ssd_impl=ssd_impl)
+    # next-token prediction on the text region only
+    x_text = x[:, n_prefix:, :]
+    logits = _logits(params, cfg, x_text[:, :-1, :])
+    labels = batch["tokens"][:, 1:]
+    mask = batch.get("loss_mask")
+    mask = mask[:, 1:] if mask is not None else None
+    return softmax_cross_entropy(logits, labels, mask)
+
+
+def lm_prefill(params, cfg, batch, *, remat=False, attn_impl=None,
+               ssd_impl=None, max_len: int | None = None):
+    """Full-sequence pass that also emits the serving cache.
+
+    Attention caches come back at seq length S (the prefix); the serving loop
+    (or this function, when ``max_len`` is given) right-pads them to the
+    decode budget.
+    """
+    x, n_prefix, cache = lm_forward(params, cfg, batch, mode="prefill",
+                                    remat=remat, attn_impl=attn_impl,
+                                    ssd_impl=ssd_impl)
+    logits = _logits(params, cfg, x[:, -1:, :])
+    if max_len is not None:
+        cache = pad_cache_to(cache, max_len)
+    return logits, cache
+
+
+# cross_k/cross_v are excluded: the encoder length is fixed, decode always
+# attends over the full cross cache (zero-padding would corrupt the softmax).
+_SEQ_CACHE_KEYS = {"k", "v", "ckv", "krope"}
+
+
+def pad_cache_to(cache, max_len: int):
+    """Right-pad the seq axis (axis 1 post any stacking axis) of attention
+    caches produced by prefill up to the decode budget."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        if name in _SEQ_CACHE_KEYS:
+            # seq axis is 1 for (B, S, ...) leaves, 2 when layer-stacked
+            axis = 2 if _looks_stacked(path) else 1
+            if leaf.shape[axis] < max_len:
+                pad_width = [(0, 0)] * leaf.ndim
+                pad_width[axis] = (0, max_len - leaf.shape[axis])
+                leaf = jnp.pad(leaf, pad_width)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _looks_stacked(path) -> bool:
+    """True when the leaf sits under the scanned 'blocks' stack (leading
+    layer axis before batch)."""
+    return any(getattr(p, "key", None) == "blocks" for p in path)
+
+
+def lm_decode_step(params, cfg, token, cache, kv_len, *, attn_impl=None,
+                   ssd_impl=None):
+    """token: (B, 1) int32; kv_len: scalar int32 count of filled cache."""
+    batch = {"tokens": token}
+    x, _, new_cache = lm_forward(params, cfg, batch, mode="decode",
+                                 cache=cache, kv_len=kv_len, remat=False,
+                                 attn_impl=attn_impl, ssd_impl=ssd_impl)
+    logits = _logits(params, cfg, x)
+    return logits, new_cache

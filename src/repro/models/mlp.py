@@ -1,0 +1,172 @@
+"""Feed-forward layers: SwiGLU dense MLP and sort-based top-k MoE.
+
+The MoE dispatch is the *sort* formulation (MegaBlocks-style dropping
+variant) rather than GShard's (tokens, experts, capacity) one-hot tensor:
+at kimi-k2 scale the one-hot dispatch tensor alone would be
+131k tokens x 384 experts x 850 capacity ~= 4e10 elements, while the sort
+path costs one argsort over tokens*top_k entries plus two gathers.  Expert
+weights are (E, d, f) einsums sharded over the ``experts`` logical axis
+(expert parallelism over the mesh's model axis); with tokens sharded over
+batch and experts over model, XLA lowers the gather/scatter pair into the
+canonical all-to-all dispatch/combine.
+
+Router numerics follow Qwen3-MoE: softmax over the full expert set in fp32,
+then renormalized top-k probabilities.  Overflow beyond per-expert capacity
+(capacity_factor * top_k * T / E) is dropped — tested to conserve combine
+mass <= 1 and route exactly when capacity is ample.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import flags
+
+__all__ = [
+    "init_mlp", "mlp_axes", "mlp_forward",
+    "init_moe", "moe_axes", "moe_forward",
+]
+
+
+def init_mlp(key, cfg, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 3)
+    if flags.get("fused_w13"):
+        # (d, 2, f): the gate/up split happens on the UNSHARDED middle axis,
+        # so the fused dot stays whole-shard aligned on the mlp axis.
+        return {
+            "w13": (jax.random.normal(ks[0], (d, 2, f)) * d ** -0.5).astype(dt),
+            "w2": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dt),
+        }
+    return {
+        "w1": (jax.random.normal(ks[0], (d, f)) * d ** -0.5).astype(dt),
+        "w3": (jax.random.normal(ks[1], (d, f)) * d ** -0.5).astype(dt),
+        "w2": (jax.random.normal(ks[2], (f, d)) * f ** -0.5).astype(dt),
+    }
+
+
+def mlp_axes(cfg):
+    if flags.get("fused_w13"):
+        return {"w13": ("embed", None, "mlp"), "w2": ("mlp", "embed")}
+    return {"w1": ("embed", "mlp"), "w3": ("embed", "mlp"),
+            "w2": ("mlp", "embed")}
+
+
+def mlp_forward(p, x):
+    if "w13" in p:
+        h13 = jnp.einsum("bsd,dgf->bsgf", x, p["w13"])
+        h = jax.nn.silu(h13[..., 0, :]) * h13[..., 1, :]
+    else:
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    h = constrain(h, ("batch", "act_seq", "act_mlp"))
+    return h @ p["w2"]
+
+
+# --------------------------------------------------------------------- #
+# MoE
+# --------------------------------------------------------------------- #
+def init_moe(key, cfg):
+    d, m = cfg.d_model, cfg.moe
+    e, f = m.n_experts, m.d_ff_expert
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dt),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(dt),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(dt),
+    }
+    if m.n_shared_experts:
+        sf = f * m.n_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": (jax.random.normal(kk[0], (d, sf)) * d ** -0.5).astype(dt),
+            "w3": (jax.random.normal(kk[1], (d, sf)) * d ** -0.5).astype(dt),
+            "w2": (jax.random.normal(kk[2], (sf, d)) * sf ** -0.5).astype(dt),
+        }
+    return p
+
+
+def moe_axes(cfg):
+    ax = {
+        "router": ("embed", None),
+        "w1": ("experts", "embed_nofsdp", "expert_mlp"),
+        "w3": ("experts", "embed_nofsdp", "expert_mlp"),
+        "w2": ("experts", "expert_mlp", "embed_nofsdp"),
+    }
+    if cfg.moe.n_shared_experts:
+        ax["shared"] = {"w1": ("embed", "mlp"), "w3": ("embed", "mlp"),
+                        "w2": ("mlp", "embed")}
+    return ax
+
+
+def moe_forward(p, cfg, x, capacity_factor: float | None = None):
+    """x: (B, S, d) -> (B, S, d).
+
+    Dispatch positions come from an exclusive cumsum over the (T, E) one-hot
+    routing mask — NOT a global argsort.  GSPMD can partition a cumsum along
+    the sharded token axis (prefix + correction), whereas an argsort over
+    all routed slots forces full replication: the sort-based variant
+    measured 15 GB f32 (t*k, d) buffers replicated AND all-reduced per MoE
+    layer on the kimi-k2 train cell (93 TB/device/step of collective
+    traffic).  Scatter/gather between the batch-sharded token axis and the
+    expert-sharded buffer lowers to the canonical dispatch/combine
+    collectives.
+    """
+    m = cfg.moe
+    e, k = m.n_experts, m.top_k
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    xf = constrain(xf, ("batch", None))
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+    capacity = max(int(t * k * cf / e), 1)
+
+    gates = jax.nn.softmax(xf.astype(jnp.float32) @ p["router"], axis=-1)
+    top_p, top_e = jax.lax.top_k(gates, k)                    # (t, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- cumsum dispatch (shardable over the token axis) ------------- #
+    # mask: (t, k, e) one-hot; position of slot (t, j) within expert =
+    # (# earlier slots routed to the same expert).
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)        # (t, k, e)
+    flat_mask = onehot.reshape(t * k, e)
+    pos_flat = jnp.cumsum(flat_mask, axis=0) - flat_mask      # exclusive
+    pos = jnp.sum(pos_flat * flat_mask, axis=1).reshape(t, k)
+    keep = pos < capacity
+
+    dest = jnp.where(keep, top_e * capacity + pos, e * capacity)
+    dest_c = dest.clip(0, e * capacity - 1)                   # (t, k)
+    weighted = jnp.where(keep, 1.0, 0.0).astype(xf.dtype)      # (t, k)
+    buf = jnp.zeros((e * capacity, d), xf.dtype)
+    # scatter each routed slot's token embedding into the expert buffer
+    buf = buf.at[dest_c.reshape(-1)].add(
+        (xf[:, None, :] * weighted[..., None]).reshape(t * k, d))
+    buf = buf.reshape(e, capacity, d)
+    buf = constrain(buf, ("experts", None, None))
+
+    # ---- expert compute (EP-sharded einsums) ------------------------- #
+    if "w13" in p:
+        h13 = jnp.einsum("ecd,egdf->egcf", buf,
+                         p["w13"].reshape(e, 2, d, -1))
+        h = jax.nn.silu(h13[:, 0]) * h13[:, 1]
+    else:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = constrain(h, ("experts", None, "expert_mlp"))
+    y = jnp.einsum("ecf,efd->ecd", h, p["w2"]).reshape(e * capacity, d)
+
+    # ---- combine ------------------------------------------------------ #
+    gathered = y[dest_c.reshape(-1)].reshape(t, k, d)
+    out = jnp.sum(
+        gathered * jnp.where(keep, top_p, 0.0)[..., None].astype(y.dtype),
+        axis=1)
+    out = constrain(out, ("batch", None)).reshape(b, s, d)
+
+    if m.n_shared_experts:
+        out = out + mlp_forward(p["shared"], x)
+    return out.astype(x.dtype)

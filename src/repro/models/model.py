@@ -1,0 +1,165 @@
+"""The Model facade: one uniform handle over all 10 architectures.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions (jit/lower-friendly) plus the spec helpers the launcher needs:
+
+* ``init_params(key)``                   — value pytree (use under
+  ``jax.eval_shape`` for the full configs: no allocation);
+* ``param_axes()``                       — logical-sharding pytree, same
+  structure;
+* ``loss(params, batch)``                — scalar train loss;
+* ``prefill(params, batch)``             — (logits, cache);
+* ``decode_step(params, token, cache, kv_len)`` — (logits, cache);
+* ``init_cache(batch, max_len)`` / ``cache_axes()``;
+* ``input_specs(shape)``                 — ShapeDtypeStruct stand-ins +
+  logical batch axes for every model input of the given shape cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import lm, whisper
+
+__all__ = ["Model", "build_model", "count_params", "analytic_flops"]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    param_axes: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    cache_axes: Callable
+    input_specs: Callable
+
+
+def build_model(cfg: ModelConfig, *, remat: bool = True,
+                attn_impl: str | None = None,
+                ssd_impl: str | None = None) -> Model:
+    if cfg.family == "audio":
+        def loss_fn(params, batch):
+            return whisper.whisper_loss(params, cfg, batch, remat=remat,
+                                        attn_impl=attn_impl)
+
+        def prefill_fn(params, batch, max_len=None):
+            return whisper.whisper_prefill(params, cfg, batch,
+                                           attn_impl=attn_impl,
+                                           max_len=max_len)
+
+        def decode_fn(params, token, cache, kv_len):
+            return whisper.whisper_decode_step(params, cfg, token, cache,
+                                               kv_len, attn_impl=attn_impl)
+
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: whisper.init_whisper(key, cfg),
+            param_axes=lambda: whisper.whisper_axes(cfg),
+            loss=loss_fn,
+            prefill=prefill_fn,
+            decode_step=decode_fn,
+            init_cache=lambda b, m: whisper.init_whisper_cache(cfg, b, m),
+            cache_axes=lambda: whisper.whisper_cache_axes(cfg),
+            input_specs=functools.partial(_input_specs, cfg),
+        )
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch, remat=remat,
+                          attn_impl=attn_impl, ssd_impl=ssd_impl)
+
+    def prefill_fn(params, batch, max_len=None):
+        return lm.lm_prefill(params, cfg, batch, attn_impl=attn_impl,
+                             ssd_impl=ssd_impl, max_len=max_len)
+
+    def decode_fn(params, token, cache, kv_len):
+        return lm.lm_decode_step(params, cfg, token, cache, kv_len,
+                                 attn_impl=attn_impl, ssd_impl=ssd_impl)
+
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: lm.init_lm(key, cfg),
+        param_axes=lambda: lm.lm_axes(cfg),
+        loss=loss_fn,
+        prefill=prefill_fn,
+        decode_step=decode_fn,
+        init_cache=lambda b, m: lm.init_lm_cache(cfg, b, m),
+        cache_axes=lambda: lm.lm_cache_axes(cfg),
+        input_specs=functools.partial(_input_specs, cfg),
+    )
+
+
+def _input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(specs, logical-axes) for the model inputs of one shape cell."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    bf16 = jnp.bfloat16
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            specs = {
+                "audio_embed": jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.d_model), bf16),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            axes = {"audio_embed": ("batch", None, None),
+                    "tokens": ("batch", None)}
+        elif cfg.family == "vlm":
+            s_text = s - cfg.n_patches
+            specs = {
+                "patches": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model),
+                                                bf16),
+                "tokens": jax.ShapeDtypeStruct((b, s_text), i32),
+            }
+            axes = {"patches": ("batch", None, None),
+                    "tokens": ("batch", None)}
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            axes = {"tokens": ("batch", None)}
+        return specs, axes
+
+    # decode: one new token against a cache of length s
+    specs = {"token": jax.ShapeDtypeStruct((b, 1), i32),
+             "kv_len": jax.ShapeDtypeStruct((), i32)}
+    axes = {"token": ("batch", None), "kv_len": ()}
+    return specs, axes
+
+
+# --------------------------------------------------------------------- #
+# analytics (used by the roofline and the partitioner)
+# --------------------------------------------------------------------- #
+def count_params(model: Model) -> int:
+    import math
+    shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    m = build_model(cfg)
+    total = count_params(m)
+    if cfg.moe is None:
+        return total
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    expert_p = 3 * cfg.d_model * cfg.moe.d_ff_expert
+    unit, n_full, tail = lm.decompose_pattern(cfg)
+    n_moe_layers = cfg.pattern().count("a")
+    return total - n_moe_layers * expert_p * e + n_moe_layers * expert_p * k
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference forward
+    (N = active params, D = tokens)."""
+    n_active = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

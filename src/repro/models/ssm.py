@@ -1,0 +1,502 @@
+"""State-space / recurrent blocks: Mamba-2 (zamba2), mLSTM and sLSTM (xLSTM).
+
+All three share the SSD scan op (``repro.kernels.ssd``) where the math
+allows:
+
+* **Mamba-2**: canonical SSD — in_proj packs [z | x | B | C | dt], a short
+  depthwise causal conv over x/B/C, softplus dt, per-head decay
+  a = exp(-A dt); gated RMS norm and out_proj.  Decode carries
+  (conv tail, state h) and costs O(1)/token.
+* **mLSTM** (xLSTM matrix memory): the recurrence
+  C_t = f_t C_{t-1} + i_t v_t k_t^T, y = q.C / max(|q.n|,1) maps onto the
+  SSD scan with decay dt = -log f_t and *decoupled* input gate
+  ``in_scale = i_t`` (the kernel's in_scale argument exists for exactly
+  this); the normalizer n_t runs as a second P=1 scan.  Simplification vs
+  the paper's stabilized exponential gating: gates are sigmoid-bounded
+  (i, f in (0,1)) instead of carrying the m_t stabilizer state — documented
+  in DESIGN.md; the structure/FLOPs/memory profile is unchanged.
+* **sLSTM** (scalar memory, recurrent gates): genuinely sequential — gates
+  read h_{t-1} — so it runs as a lax.scan over time with the exact
+  stabilizer (m_t) recurrence from the paper.  This is the one block in the
+  zoo that cannot be chunk-parallelized; its presence in xlstm-350m is why
+  that arch's roofline is latency- not FLOP-limited.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ssd.ops import ssd_scan
+from ..parallel.sharding import constrain
+from .common import rms_norm
+
+__all__ = [
+    "init_mamba2", "mamba2_axes", "mamba2_forward", "init_mamba2_cache",
+    "mamba2_cache_axes",
+    "init_mlstm", "mlstm_axes", "mlstm_forward", "init_mlstm_cache",
+    "mlstm_cache_axes",
+    "init_slstm", "slstm_axes", "slstm_forward", "init_slstm_cache",
+    "slstm_cache_axes",
+]
+
+
+def _dt_of(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ===================================================================== #
+# Mamba-2
+# ===================================================================== #
+def _mamba_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.n_groups, s.state_dim, s.head_dim
+
+
+def init_mamba2(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh, g, n, p_ = _mamba_dims(cfg)
+    dt = _dt_of(cfg)
+    conv_dim = d_inner + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        # packs [z | x | B | C | dt]
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_inner + 2 * g * n + nh))
+                    * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_dim))
+                   * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),       # A = exp(a_log) in (0+,)
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d))
+                     * d_inner ** -0.5).astype(dt),
+    }
+
+
+def mamba2_axes(cfg):
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "norm_w": ("mlp",),
+        "out_proj": ("mlp", "embed"),
+    }
+
+
+def init_mamba2_cache(cfg, batch: int, max_len: int = 0):
+    s = cfg.ssm
+    d_inner, nh, g, n, p_ = _mamba_dims(cfg)
+    dt = _dt_of(cfg)
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dt),
+        "state": jnp.zeros((batch, nh, n, p_), jnp.float32),
+    }
+
+
+def mamba2_cache_axes(cfg):
+    return {"conv": ("batch", None, "act_mlp"),
+            "state": ("batch", "cache_heads", None, None)}
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv, kernel k, via shifted adds.
+
+    x: (B, S, C); w: (k, C); tail: (B, k-1, C) carried state for decode.
+    Returns (y, new_tail).
+    """
+    k = w.shape[0]
+    pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype) if tail is None else tail
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(k)) + b
+    new_tail = xp[:, xp.shape[1] - (k - 1):, :]
+    return jax.nn.silu(y), new_tail
+
+
+def mamba2_forward(p, cfg, x, *, mode: str = "train", cache=None,
+                   ssd_impl: str | None = None):
+    """x: (B, S, d).  Returns (out, new_cache)."""
+    s_cfg = cfg.ssm
+    d_inner, nh, g, n, ph = _mamba_dims(cfg)
+    b, s, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: d_inner + d_inner + 2 * g * n]
+    dt_raw = zxbcdt[..., -nh:]
+
+    tail = cache["conv"] if mode == "decode" else None
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail)
+    xs = xbc[..., :d_inner].reshape(b, s, nh, ph)
+    Bm = xbc[..., d_inner: d_inner + g * n].reshape(b, s, g, n)
+    Cm = xbc[..., d_inner + g * n:].reshape(b, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["a_log"])
+
+    if mode == "decode":
+        # O(1) recurrent step (s == 1)
+        a = jnp.exp(-A[None, None, :] * dt)[:, 0]             # (b, nh)
+        hpg = nh // g
+        Bh = jnp.repeat(Bm[:, 0], hpg, axis=1)                # (b, nh, n)
+        Ch = jnp.repeat(Cm[:, 0], hpg, axis=1)
+        dx = (dt[:, 0, :, None] * xs[:, 0].astype(jnp.float32))
+        h_new = (a[..., None, None] * cache["state"]
+                 + Bh[..., None] * dx[:, :, None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h_new)
+        y = y[:, None].reshape(b, s, nh, ph)
+        new_cache = {"conv": new_tail, "state": h_new}
+    else:
+        y, h_final = ssd_scan(xs, dt, A, Bm, Cm, chunk=s_cfg.chunk,
+                              impl=ssd_impl)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": new_tail, "state": h_final}
+
+    y = y.astype(x.dtype) + (p["d_skip"].astype(x.dtype)[:, None] * xs).astype(x.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    y = constrain(y, ("batch", "act_seq", "act_mlp"))
+    return y @ p["out_proj"], new_cache
+
+
+# ===================================================================== #
+# mLSTM (xLSTM matrix-memory block)
+# ===================================================================== #
+def _mlstm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = cfg.n_heads
+    ph = d_inner // nh
+    return d_inner, nh, ph
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_inner, nh, ph = _mlstm_dims(cfg)
+    dt = _dt_of(cfg)
+    ks = jax.random.split(key, 6)
+    lin = lambda k_, i, o: (jax.random.normal(k_, (i, o)) * i ** -0.5).astype(dt)
+    return {
+        "up": lin(ks[0], d, 2 * d_inner),            # [x_in | z gate]
+        "wq": lin(ks[1], d_inner, d_inner),
+        "wk": lin(ks[2], d_inner, d_inner),
+        "wv": lin(ks[3], d_inner, d_inner),
+        "w_gates": lin(ks[4], d_inner, 2 * nh),      # [i | f] per head
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "down": lin(ks[5], d_inner, d),
+    }
+
+
+def mlstm_axes(cfg):
+    return {
+        "up": ("embed", "mlp"),
+        "wq": ("mlp", "heads"), "wk": ("mlp", "heads"), "wv": ("mlp", "heads"),
+        "w_gates": ("mlp", None),
+        "norm_w": ("mlp",),
+        "down": ("mlp", "embed"),
+    }
+
+
+def init_mlstm_cache(cfg, batch: int, max_len: int = 0):
+    d_inner, nh, ph = _mlstm_dims(cfg)
+    # matrix memory C (nh, ph_k, ph_v) and normalizer n (nh, ph_k)
+    return {
+        "C": jnp.zeros((batch, nh, ph, ph), jnp.float32),
+        "n": jnp.zeros((batch, nh, ph), jnp.float32),
+    }
+
+
+def mlstm_cache_axes(cfg):
+    return {"C": ("batch", "cache_heads", None, None),
+            "n": ("batch", "cache_heads", None)}
+
+
+def mlstm_forward(p, cfg, x, *, mode: str = "train", cache=None,
+                  ssd_impl: str | None = None):
+    s_cfg = cfg.ssm
+    d_inner, nh, ph = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+
+    up = x @ p["up"]
+    x_in, z = up[..., :d_inner], up[..., d_inner:]
+    q = (x_in @ p["wq"]).reshape(b, s, nh, ph)
+    k = (x_in @ p["wk"]).reshape(b, s, nh, ph) * ph ** -0.5
+    v = (x_in @ p["wv"]).reshape(b, s, nh, ph)
+    gates = (x_in @ p["w_gates"]).astype(jnp.float32)
+    i_g = jax.nn.sigmoid(gates[..., :nh])                     # (b, s, nh)
+    f_g = jax.nn.sigmoid(gates[..., nh:] + 2.0)
+
+    if mode == "decode":
+        ig, fg = i_g[:, 0], f_g[:, 0]
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        qf = q[:, 0].astype(jnp.float32)
+        C_new = fg[..., None, None] * cache["C"] + ig[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])
+        n_new = fg[..., None] * cache["n"] + ig[..., None] * kf
+        num = jnp.einsum("bhk,bhkp->bhp", qf, C_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new)), 1.0)
+        y = (num / den[..., None])[:, None].reshape(b, s, nh, ph)
+        new_cache = {"C": C_new, "n": n_new}
+    else:
+        # SSD form: decay dt = -log f, input gate i; B=k, C=q per head
+        dtv = -jnp.log(jnp.clip(f_g, 1e-6, 1 - 1e-6))
+        A = jnp.ones((nh,), jnp.float32)
+        y_num, C_fin = ssd_scan(v, dtv, A, k.reshape(b, s, nh, ph),
+                                q.reshape(b, s, nh, ph),
+                                chunk=s_cfg.chunk, impl=ssd_impl,
+                                in_scale=i_g)
+        ones = jnp.ones((b, s, nh, 1), v.dtype)
+        y_den, n_fin = ssd_scan(ones, dtv, A, k.reshape(b, s, nh, ph),
+                                q.reshape(b, s, nh, ph),
+                                chunk=s_cfg.chunk, impl=ssd_impl,
+                                in_scale=i_g)
+        den = jnp.maximum(jnp.abs(y_den[..., 0].astype(jnp.float32)), 1.0)
+        y = y_num.astype(jnp.float32) / den[..., None]
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"C": C_fin.transpose(0, 1, 2, 3),
+                         "n": n_fin[..., 0]}
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    return y @ p["down"], new_cache
+
+
+# ===================================================================== #
+# sLSTM (xLSTM scalar-memory block, stabilized exponential gating)
+# ===================================================================== #
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    dt = _dt_of(cfg)
+    ks = jax.random.split(key, 3)
+    lin = lambda k_, i, o: (jax.random.normal(k_, (i, o)) * i ** -0.5).astype(dt)
+    return {
+        "w_x": lin(ks[0], d, 4 * d),          # z, i, f, o pre-activations
+        "r_h": (jax.random.normal(ks[1], (nh, dh, 4 * dh)) * dh ** -0.5
+                ).astype(jnp.float32),        # block-diag recurrent weights
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm_w": jnp.ones((d,), jnp.float32),
+        "down": lin(ks[2], d, d),
+    }
+
+
+def slstm_axes(cfg):
+    return {"w_x": ("embed", None), "r_h": ("heads", None, None),
+            "b": (None,), "norm_w": (None,), "down": (None, "embed")}
+
+
+def init_slstm_cache(cfg, batch: int, max_len: int = 0):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((batch, nh), jnp.float32)}
+
+
+def slstm_cache_axes(cfg):
+    ax = ("batch", "cache_heads", None)
+    return {"c": ax, "n": ax, "h": ax, "m": ("batch", "cache_heads")}
+
+
+def _slstm_cell(p, cfg, xt, state):
+    """One timestep; xt (B, 4d) preactivations; state dict of (B,nh,dh)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b = xt.shape[0]
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hdf->bhf", h, p["r_h"])             # (B, nh, 4dh)
+    pre = xt.reshape(b, nh, 4 * dh).astype(jnp.float32) + rec
+    z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+    # per-head scalar gates (mean over the head dim keeps shapes scalar/head)
+    log_i = i_.mean(-1)
+    log_f = jax.nn.log_sigmoid(f_.mean(-1) + 1.0)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    z_v = jnp.tanh(z_)
+    o_v = jax.nn.sigmoid(o_)
+    c_new = f_s[..., None] * c + i_s[..., None] * z_v
+    n_new = f_s[..., None] * n + i_s[..., None]
+    h_new = o_v * (c_new / jnp.maximum(n_new, 1.0))
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def _slstm_scan_ad(pre, r_h, nh):
+    """Plain AD-differentiable time scan (reference path)."""
+    b = pre.shape[1]
+    d = pre.shape[-1] // 4
+    dh = d // nh
+    z = jnp.zeros((b, nh, dh), jnp.float32)
+    state = {"c": z, "n": z, "h": z, "m": jnp.zeros((b, nh), jnp.float32)}
+
+    def step(st, xt):
+        st = _cell_math(xt, st, r_h, nh, dh)
+        return st, st["h"]
+    final, hs = jax.lax.scan(step, state, pre)
+    return hs, final
+
+
+def _cell_math(xt, state, r_h, nh, dh):
+    """One sLSTM timestep from (B, 4d) preactivations (fp32 math)."""
+    b = xt.shape[0]
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,hdf->bhf", h, r_h)
+    pre = xt.reshape(b, nh, 4 * dh).astype(jnp.float32) + rec
+    z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+    log_i = i_.mean(-1)
+    log_f = jax.nn.log_sigmoid(f_.mean(-1) + 1.0)
+    # stabilizer treated as a constant shift for AD (standard practice —
+    # exact invariance holds up to the normalizer floor), which also lets
+    # the deferred-gradient custom VJP match plain AD bit-for-bit.
+    m_new = jax.lax.stop_gradient(jnp.maximum(log_f + m, log_i))
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    z_v = jnp.tanh(z_)
+    o_v = jax.nn.sigmoid(o_)
+    c_new = f_s[..., None] * c + i_s[..., None] * z_v
+    n_new = f_s[..., None] * n + i_s[..., None]
+    # strict-where floor: jnp.maximum averages gradients at exact ties
+    # (n == 1.0 happens whenever i_s == 1), which would diverge from the
+    # deferred-gradient backward's where(n > 1) convention.
+    denom = jnp.where(n_new > 1.0, n_new, 1.0)
+    h_new = o_v * (c_new / denom)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _slstm_scan(pre, r_h, nh):
+    """Time scan with a DEFERRED-weight-gradient backward.
+
+    Plain reverse-mode AD through the scan accumulates dr_h (and re-reduces
+    it across the batch-sharded mesh axis) at EVERY timestep — measured as
+    ~200k tiny all-reduces per train step on the xlstm cell.  The custom
+    backward runs the sequential dh/dstate recursion saving per-step dgates,
+    then forms dr_h with ONE einsum over the saved history (a single psum).
+    """
+    hs, _ = _slstm_scan_ad(pre, r_h, nh)
+    return hs
+
+
+def _slstm_scan_fwd(pre, r_h, nh):
+    hs, final = _slstm_scan_ad(pre, r_h, nh)
+    return hs, (pre, r_h, hs)
+
+
+def _slstm_scan_bwd(nh, res, dhs):
+    pre, r_h, hs = res
+    s, b = pre.shape[0], pre.shape[1]
+    d = pre.shape[-1] // 4
+    dh = d // nh
+
+    # recompute per-step states cheaply in one forward scan (c, n, m, and
+    # h_{t-1}); they are needed by the reverse recursion.
+    def fwd_step(st, xt):
+        new = _cell_math(xt, st, r_h, nh, dh)
+        return new, (st["c"], st["n"], st["h"], st["m"], new["c"], new["n"],
+                     new["m"])
+    z0 = jnp.zeros((b, nh, dh), jnp.float32)
+    st0 = {"c": z0, "n": z0, "h": z0, "m": jnp.zeros((b, nh), jnp.float32)}
+    _, saved = jax.lax.scan(fwd_step, st0, pre)
+    c_prev, n_prev, h_prev, m_prev, c_new, n_new, m_new = saved
+
+    def bwd_step(carry, inp):
+        dc, dn, dh_carry, _ = carry
+        (xt, dy, cp, np_, hp, mp, cn, nn, mn) = inp
+        # recompute gate pre-activations for this step
+        rec = jnp.einsum("bhd,hdf->bhf", hp, r_h)
+        pre_t = xt.reshape(b, nh, 4 * dh).astype(jnp.float32) + rec
+        z_, i_, f_, o_ = jnp.split(pre_t, 4, axis=-1)
+        log_i = i_.mean(-1)
+        log_f = jax.nn.log_sigmoid(f_.mean(-1) + 1.0)
+        i_s = jnp.exp(log_i - mn)
+        f_s = jnp.exp(log_f + mp - mn)
+        z_v = jnp.tanh(z_)
+        o_v = jax.nn.sigmoid(o_)
+        denom = jnp.maximum(nn, 1.0)
+        h_pre = cn / denom
+
+        dh_t = dy + dh_carry
+        do_v = dh_t * h_pre
+        dc_t = dc + dh_t * o_v / denom
+        dn_t = dn - jnp.where(nn > 1.0, dh_t * o_v * cn / (denom * denom), 0.0)
+
+        dz_v = dc_t * i_s[..., None]
+        di_s = (dc_t * z_v).sum(-1) + dn_t.sum(-1)
+        df_s = (dc_t * cp).sum(-1) + (dn_t * np_).sum(-1)
+        # stabilized gates: d log_i / d log_f (m treated as a constant shift,
+        # the standard straight-through treatment of the stabilizer)
+        dlog_i = di_s * i_s
+        dlog_f = df_s * f_s
+        dz_ = dz_v * (1.0 - z_v * z_v)
+        di_ = jnp.broadcast_to(dlog_i[..., None] / dh, z_.shape)
+        df_ = jnp.broadcast_to(
+            (dlog_f * jax.nn.sigmoid(-(f_.mean(-1) + 1.0)))[..., None] / dh,
+            z_.shape)
+        do_ = do_v * o_v * (1.0 - o_v)
+        dpre = jnp.concatenate([dz_, di_, df_, do_], axis=-1)   # (b, nh, 4dh)
+
+        dh_prev = jnp.einsum("bhf,hdf->bhd", dpre, r_h)
+        dc_prev = dc_t * f_s[..., None]
+        dn_prev = dn_t * f_s[..., None]
+        return (dc_prev, dn_prev, dh_prev, 0.0), dpre
+
+    h_prev_seq = h_prev  # h_{t-1} per step (saved above)
+    init = (jnp.zeros((b, nh, dh), jnp.float32),
+            jnp.zeros((b, nh, dh), jnp.float32),
+            jnp.zeros((b, nh, dh), jnp.float32), 0.0)
+    inputs = (pre, dhs.astype(jnp.float32), c_prev, n_prev, h_prev, m_prev,
+              c_new, n_new, m_new)
+    _, dpres = jax.lax.scan(bwd_step, init, inputs, reverse=True)
+
+    # deferred weight gradient: ONE contraction over (steps x batch)
+    dr_h = jnp.einsum("sbhd,sbhf->hdf", h_prev_seq, dpres)
+    dpre_out = dpres.reshape(s, b, nh * 4 * dh).astype(pre.dtype)
+    return dpre_out, dr_h
+
+
+_slstm_scan.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_forward(p, cfg, x, *, mode: str = "train", cache=None):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    b, s, _ = x.shape
+    pre = x @ p["w_x"] + p["b"].astype(x.dtype)
+
+    state = cache if mode == "decode" else {
+        k: jnp.zeros_like(v) for k, v in init_slstm_cache(cfg, b).items()}
+
+    if mode == "decode":
+        new_state = _slstm_cell(p, cfg, pre[:, 0], state)
+        y = new_state["h"].reshape(b, 1, d)
+        new_cache = new_state
+    elif mode == "prefill":
+        def step(st, xt):
+            st = _slstm_cell(p, cfg, xt, st)
+            return st, st["h"]
+        final, hs = jax.lax.scan(step, state, pre.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        new_cache = final
+    else:  # train: deferred-gradient custom VJP scan
+        hs = _slstm_scan(pre.transpose(1, 0, 2), p["r_h"], nh)
+        y = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+        new_cache = None
+
+    y = rms_norm(y.astype(x.dtype), p["norm_w"], cfg.norm_eps)
+    return y @ p["down"], new_cache

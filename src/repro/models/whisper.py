@@ -1,0 +1,149 @@
+"""Whisper-style encoder-decoder assembly (backbone only; conv/mel frontend
+is a stub — ``input_specs`` feeds precomputed frame embeddings).
+
+Encoder: bidirectional attention blocks over (B, Se=1500, d) frame
+embeddings (learned positional bias added since rope is skipped for
+non-causal audio frames in the original too).  Decoder: causal self-attn +
+cross-attn blocks, scan-over-layers like the LM path.  Decode carries the
+self-attn KV cache plus per-layer cross K/V projected once at prefill —
+cross projections are the classic enc-dec serving optimization (Whisper's
+own runtime caches them the same way).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import blocks
+from .common import rms_norm, softmax_cross_entropy
+
+__all__ = [
+    "init_whisper", "whisper_axes", "whisper_loss", "whisper_prefill",
+    "whisper_decode_step", "init_whisper_cache", "whisper_cache_axes",
+]
+
+
+def init_whisper(key, cfg):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k_emb, k_pos, k_enc, k_dec, k_norm = jax.random.split(key, 5)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                  * 0.02).astype(dt),
+        "enc_pos": (jax.random.normal(k_pos, (cfg.encoder_seq, cfg.d_model))
+                    * 0.02).astype(dt),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "encoder": jax.vmap(lambda kk: blocks.init_block(kk, cfg, "e"))(
+            jax.random.split(k_enc, cfg.encoder_layers)),
+        "decoder": jax.vmap(lambda kk: blocks.init_block(kk, cfg, "c"))(
+            jax.random.split(k_dec, cfg.n_layers)),
+    }
+    return params
+
+
+def whisper_axes(cfg):
+    lift = lambda ax: jax.tree.map(lambda a: ("layers", *a), ax,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("vocab", "embed_nofsdp"),
+        "enc_pos": (None, "embed_nofsdp"),
+        "enc_norm": (None,),
+        "final_norm": (None,),
+        "encoder": lift(blocks.block_axes(cfg, "e")),
+        "decoder": lift(blocks.block_axes(cfg, "c")),
+    }
+
+
+def _encode(params, cfg, audio_embed, *, remat=True, attn_impl=None):
+    x = audio_embed.astype(params["embed"].dtype) + params["enc_pos"][None]
+    x = constrain(x, ("batch", "act_seq", "act_embed"))
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, ps):
+        x, _ = blocks.block_forward(ps, cfg, "e", x, positions, mode="train",
+                                    attn_impl=attn_impl)
+        return x, None
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decode_stack(params, cfg, x, positions, enc_out, *, mode, cache, kv_len,
+                  remat, attn_impl):
+    want_cache = mode in ("prefill", "decode")
+
+    def body(x, ps, cs):
+        x, nc = blocks.block_forward(ps, cfg, "c", x, positions, mode=mode,
+                                     cache=cs, kv_len=kv_len, enc_out=enc_out,
+                                     attn_impl=attn_impl)
+        return x, nc
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    if mode == "decode":
+        x, ncs = jax.lax.scan(lambda x, inp: body(x, *inp), x,
+                              (params["decoder"], cache))
+    else:
+        x, ncs = jax.lax.scan(lambda x, ps: body(x, ps, None), x,
+                              params["decoder"])
+    return x, (ncs if want_cache else None)
+
+
+def whisper_loss(params, cfg, batch, *, remat=True, attn_impl=None,
+                 ssd_impl=None):
+    enc_out = _encode(params, cfg, batch["audio_embed"], remat=remat,
+                      attn_impl=attn_impl)
+    x = params["embed"][batch["tokens"]]
+    positions = jnp.arange(x.shape[1])
+    x, _ = _decode_stack(params, cfg, x, positions, enc_out, mode="train",
+                         cache=None, kv_len=None, remat=remat,
+                         attn_impl=attn_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, :-1, :] @ params["embed"].T
+    logits = constrain(logits, ("batch", "act_seq", "vocab"))
+    return softmax_cross_entropy(logits, batch["tokens"][:, 1:])
+
+
+def init_whisper_cache(cfg, batch: int, max_len: int):
+    one = blocks.init_block_cache(cfg, "c", batch, max_len)
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (cfg.n_layers, *l.shape)),
+                        one)
+
+
+def whisper_cache_axes(cfg):
+    return jax.tree.map(lambda a: ("layers", *a),
+                        blocks.block_cache_axes(cfg, "c"),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def whisper_prefill(params, cfg, batch, *, remat=False, attn_impl=None,
+                    ssd_impl=None, max_len: int | None = None):
+    from .lm import pad_cache_to
+    enc_out = _encode(params, cfg, batch["audio_embed"], remat=remat,
+                      attn_impl=attn_impl)
+    x = params["embed"][batch["tokens"]]
+    positions = jnp.arange(x.shape[1])
+    x, cache = _decode_stack(params, cfg, x, positions, enc_out,
+                             mode="prefill", cache=None, kv_len=None,
+                             remat=remat, attn_impl=attn_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1:, :] @ params["embed"].T
+    if max_len is not None:
+        cache = pad_cache_to({"blocks": cache}, max_len)["blocks"]
+    return logits, cache
+
+
+def whisper_decode_step(params, cfg, token, cache, kv_len, *, attn_impl=None,
+                        ssd_impl=None):
+    x = params["embed"][token]
+    positions = kv_len + jnp.arange(1)
+    x, new_cache = _decode_stack(params, cfg, x, positions, None,
+                                 mode="decode", cache=cache, kv_len=kv_len,
+                                 remat=False, attn_impl=attn_impl)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from .adamw import adamw, sgd, OptState  # noqa: F401
+from .schedule import cosine_schedule, constant_schedule, warmup_cosine  # noqa: F401
+from .clip import clip_by_global_norm, global_norm  # noqa: F401
+from .compress import int8_compress, int8_decompress, compressed_psum  # noqa: F401

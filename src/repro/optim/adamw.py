@@ -1,0 +1,122 @@
+"""Minimal functional optimizers (AdamW, SGD) — optax is not available
+offline, so these are hand-rolled with the same API shape: ``init`` builds an
+optimizer-state pytree mirroring the params, ``update`` maps (grads, state,
+params) -> (updates, state).
+
+Design points for the distributed path:
+
+* the moment pytrees inherit the *parameter sharding* (they are created with
+  ``jax.tree.map`` over params inside the jitted train step), so optimizer
+  state is ZeRO-sharded for free wherever params are FSDP-sharded;
+* optional fp32 master copies for bf16 params (``master_fp32=True``) — the
+  canonical mixed-precision recipe at scale;
+* everything is a pure function of pytrees: checkpointing serializes the
+  state exactly like params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "adamw", "sgd"]
+
+
+@dataclasses.dataclass
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OptState:
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Any = None
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu, self.master), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    master_fp32: bool = False,
+) -> Optimizer:
+    """AdamW with decoupled weight decay (paper trains RESPECT with Adam,
+    lr=1e-4); the LM stack uses the same implementation with wd>0."""
+
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        zeros = _tmap(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        master = (
+            _tmap(lambda p: p.astype(jnp.float32), params) if master_fp32 else None
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                        nu=_tmap(jnp.copy, zeros), master=master)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = _tmap(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        base = state.master if state.master is not None else params
+
+        def upd(p, m, v):
+            mhat = m / b1c
+            vhat = v / b2c
+            return p.astype(jnp.float32) - lr_t * (
+                mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            )
+
+        new_base = _tmap(upd, base, mu, nu)
+        new_params = _tmap(lambda nb, p: nb.astype(p.dtype), new_base, params)
+        new_master = new_base if state.master is not None else None
+        return new_params, OptState(step=step, mu=mu, nu=nu, master=new_master)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        mu = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+            upd = mu
+        else:
+            mu, upd = None, _tmap(lambda g: g.astype(jnp.float32), grads)
+        new_params = _tmap(lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+                           params, upd)
+        return new_params, OptState(step=step, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)

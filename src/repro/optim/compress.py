@@ -1,0 +1,64 @@
+"""int8 gradient compression with error feedback for cross-pod all-reduce.
+
+At 1000+ node scale the data-center interconnect (DCI) between pods is the
+scarcest bandwidth; compressing the gradient all-reduce that crosses the
+``pod`` axis by 4x (bf16 -> int8 + one fp32 scale per tensor) is a standard
+distributed-optimization trick.  Error feedback (Karimireddy et al., 2019)
+keeps the quantization bias from accumulating: the residual of each step's
+quantization is added back before the next step's compression, so SGD-style
+convergence guarantees are preserved.
+
+``compressed_psum`` quantizes per-leaf, all-reduces the int8 payload inside a
+``shard_map``/collective context, and dequantizes — used by the train step
+when ``grad_compression="int8"``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "int8_decompress", "compressed_psum"]
+
+
+def int8_compress(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 payload, fp32 scale). Symmetric per-tensor quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(tree, axis_name: str, error_tree=None):
+    """All-reduce a gradient pytree over ``axis_name`` in int8.
+
+    Returns (mean-reduced tree, new error-feedback tree).  Must be called
+    inside shard_map/pmap where ``axis_name`` is bound.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + (e.astype(jnp.float32) if e is not None else 0.0)
+        # shared scale across the axis (one scalar all-reduce) so the tensor
+        # payload itself travels as int8 and sums exactly in int32.
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        mean = total.astype(jnp.float32) * scale / n
+        err = g32 - q.astype(jnp.float32) * scale
+        return mean.astype(g.dtype), err.astype(jnp.float32)
+
+    if error_tree is None:
+        error_tree = jax.tree.map(lambda _: None, tree,
+                                  is_leaf=lambda x: x is None)
+    flat_g, treedef = jax.tree.flatten(tree)
+    flat_e = treedef.flatten_up_to(error_tree) if error_tree is not None else [None] * len(flat_g)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    means = treedef.unflatten([m for m, _ in out])
+    errs = treedef.unflatten([e for _, e in out])
+    return means, errs

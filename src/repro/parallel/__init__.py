@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    LogicalRules,
+    constrain,
+    resolve_axes,
+    sharding_for,
+    tree_shardings,
+)

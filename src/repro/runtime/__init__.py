@@ -1,0 +1,2 @@
+from .train_loop import TrainLoop, TrainLoopConfig  # noqa: F401
+from .metrics import StepTimer, MetricsLogger  # noqa: F401

@@ -1,0 +1,1 @@
+from .hlo import analyze_hlo, HloCost  # noqa: F401

@@ -1,0 +1,426 @@
+"""HLO text analyzer: FLOPs / HBM bytes / collective bytes with loop trip
+counts.
+
+Why not ``compiled.cost_analysis()``?  XLA's cost analysis counts a ``while``
+body **once**, but every model here wraps its layers (and microbatches, and
+flash/SSD chunk loops) in ``lax.scan`` — a 64-layer transformer would be
+undercounted 64x.  This analyzer parses the optimized per-device HLO module,
+builds the computation call graph, extracts each while loop's trip count from
+its condition's comparison constant, and multiplies the body costs through.
+
+Cost conventions (documented, deliberately simple):
+
+* FLOPs — dot/dot-general and convolution only (2 * prod(output dims) *
+  contracted dims); elementwise and transcendental FLOPs are ignored (they
+  are bandwidth-, not MXU-, limited on TPU).
+* HBM bytes — per instruction: result bytes + operand bytes, skipping pure
+  control/layout ops (tuple/get-tuple-element/parameter/bitcast/constant).
+  Post-fusion HLO makes this a good proxy for actual HBM traffic: a fusion's
+  operands/results ARE its memory traffic.  Slice-aware correction: a
+  dynamic-slice/gather reads only its result-sized window, and a
+  dynamic-update-slice writes only its update — charging the full operand
+  would bill a scanned layer stack L times per step (or a 32k KV cache per
+  decoded token).  Fusion operands whose only in-fusion consumers are
+  slicing ops are charged at the consumers' result sizes.
+* collective bytes — result-shape bytes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute (+ -start variants).
+  all-reduce wire traffic is ~2x(n-1)/n of payload on a ring; we report raw
+  payload and fold ring factors into the roofline's link-time formula.
+
+Verified against an unrolled-vs-scanned reference model in the tests: the
+analyzer agrees with XLA's own numbers on straight-line code and restores the
+trip-count factor on scanned code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# type = lazy match up to the first bare word followed by '(' (the opcode);
+# handles tuple types with nested parens/spaces.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'known_trip_count[\'"]?\s*:\s*\{\s*[\'"]n[\'"]\s*:\s*[\'"](\d+)')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# XLA:CPU legalizes bf16 arithmetic and collectives to f32 (converts in,
+# f32 op, converts out); TPU executes them natively in bf16.  The "bf16eq"
+# byte count prices large f32 tensors (activation-sized, > 2^16 elements,
+# rank >= 2) at 2 bytes/element so the roofline reflects the TPU target
+# rather than the CPU lowering artifact.  Genuine small f32 state (norm
+# stats, optimizer scalars) is unaffected by the size gate; genuinely-f32
+# big tensors (master weights when enabled, flash fp32 tiles) are
+# conservatively halved too — on TPU the flash tiles never reach HBM at all.
+_BF16EQ_MIN_ELEMS = 1 << 16
+
+
+def _shape_bytes_bf16eq(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        nd = 0
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+                nd += 1
+        unit = _DTYPE_BYTES[dtype]
+        if dtype == "f32" and nd >= 2 and n >= _BF16EQ_MIN_ELEMS:
+            unit = 2
+        total += n * unit
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    bytes_bf16eq: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_bf16eq: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    collective_bytes_by_kind: dict = dataclasses.field(default_factory=dict)
+    loop_trips: dict = dataclasses.field(default_factory=dict)
+
+    def merged(self, other: "HloCost", mult: float = 1.0) -> "HloCost":
+        out = HloCost(
+            flops=self.flops + mult * other.flops,
+            bytes_accessed=self.bytes_accessed + mult * other.bytes_accessed,
+            bytes_bf16eq=self.bytes_bf16eq + mult * other.bytes_bf16eq,
+            collective_bytes=self.collective_bytes + mult * other.collective_bytes,
+            collective_bytes_bf16eq=(self.collective_bytes_bf16eq
+                                     + mult * other.collective_bytes_bf16eq),
+            collective_counts=dict(self.collective_counts),
+            collective_bytes_by_kind=dict(self.collective_bytes_by_kind),
+            loop_trips=dict(self.loop_trips),
+        )
+        for k, v in other.collective_counts.items():
+            out.collective_counts[k] = out.collective_counts.get(k, 0) + mult * v
+        for k, v in other.collective_bytes_by_kind.items():
+            out.collective_bytes_by_kind[k] = (
+                out.collective_bytes_by_kind.get(k, 0) + mult * v)
+        return out
+
+
+def _parse_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    current = None
+    for line in text.splitlines():
+        if current is None or " = " not in line:
+            if line.rstrip().endswith("{") and "->" in line:
+                m = _COMP_RE.match(line)
+                if m:
+                    current = m.group(1)
+                    comps[current] = []
+                    continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[current].append(
+                _Instr(*m.groups(), is_root="ROOT " in line))
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _dot_flops(instr: _Instr, symtab: dict[str, str]) -> float:
+    """2 * prod(out) * prod(contracting dims of lhs)."""
+    out_dims = _shape_dims(instr.type_str)
+    # operand names
+    args = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    lhs_type = symtab.get(args[0]) if args else None
+    contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    flops = 2.0
+    for d in out_dims:
+        flops *= d
+    if lhs_type and contract and contract.group(1):
+        lhs_dims = _shape_dims(lhs_type)
+        for ci in contract.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                flops *= lhs_dims[ci]
+    return flops
+
+
+def _conv_flops(instr: _Instr, symtab: dict[str, str]) -> float:
+    out_dims = _shape_dims(instr.type_str)
+    args = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    rhs_type = symtab.get(args[1]) if len(args) > 1 else None
+    flops = 2.0
+    for d in out_dims:
+        flops *= d
+    if rhs_type:
+        rhs_dims = _shape_dims(rhs_type)
+        # kernel spatial x input-feature dims (all but output-feature dim)
+        prod = 1
+        for d in rhs_dims:
+            prod *= d
+        out_feat = max(out_dims[-1] if out_dims else 1, 1)
+        flops *= max(prod // max(out_feat, 1), 1)
+    return flops
+
+
+def _loop_trip_count(cond_instrs: list[_Instr]) -> float:
+    """Trip count from the condition's comparison constant (scan loops
+    compare the induction var against a constant)."""
+    consts = {}
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.rest and
+                          f"constant({ins.rest}" or "")
+            # rest holds e.g. "64)" — normalize:
+            m2 = re.match(r"(-?\d+)\)", ins.rest.strip())
+            if m2:
+                consts[ins.name] = int(m2.group(1))
+    for ins in cond_instrs:
+        if ins.op == "compare":
+            args = re.findall(r"%?([\w.\-]+)", ins.rest.split(")")[0])
+            for a in args:
+                if a in consts and consts[a] > 0:
+                    return float(consts[a])
+    return 1.0
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    entry = _entry_name(text)
+    if entry is None or entry not in comps:
+        # fall back: treat the largest computation as entry
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+        if entry is None:
+            return HloCost()
+
+    memo: dict[str, HloCost] = {}
+
+    _SLICING = {"dynamic-slice", "gather", "slice"}
+
+    def _fusion_param_read_bytes(comp_name: str, size_fn=_shape_bytes
+                                 ) -> dict[int, int] | None:
+        """For a fused computation: param index -> bytes actually read, for
+        params whose only consumers are slicing ops.  None entries = full."""
+        instrs = comps.get(comp_name)
+        if instrs is None:
+            return None
+        param_names = {}
+        for ins in instrs:
+            if ins.op == "parameter":
+                m = re.match(r"(\d+)", ins.rest)
+                if m:
+                    param_names[ins.name] = int(m.group(1))
+        reads: dict[int, int] = {}
+        consumers: dict[str, list[_Instr]] = defaultdict(list)
+        for ins in instrs:
+            for a in re.findall(r"%([\w.\-]+)", ins.rest):
+                if a in param_names:
+                    consumers[a].append(ins)
+        symtab_f = {i.name: i.type_str for i in instrs}
+        for pname, idx in param_names.items():
+            cons = consumers.get(pname, [])
+            if not cons:
+                continue
+            ok = True
+            byts = 0
+            for c in cons:
+                if c.op in _SLICING:
+                    byts += size_fn(c.type_str)
+                elif c.op == "dynamic-update-slice":
+                    # charged at the update size iff the param is the target
+                    args = re.findall(r"%([\w.\-]+)",
+                                      c.rest.split("), ")[0])
+                    if args and args[0] == pname and len(args) > 1:
+                        byts += size_fn(symtab_f.get(args[1], ""))
+                    else:
+                        ok = False
+                        break
+                else:
+                    ok = False
+                    break
+            if ok:
+                reads[idx] = byts
+        return reads
+
+    def _dus_root_update_bytes(comp_name: str, size_fn=_shape_bytes
+                               ) -> int | None:
+        """If the fused computation's ROOT is a dynamic-update-slice (or a
+        bitcast of one), return the update-operand bytes, else None."""
+        instrs = comps.get(comp_name)
+        if not instrs:
+            return None
+        symtab_f = {i.name: i.type_str for i in instrs}
+        roots = [i for i in instrs if i.is_root]
+        root = roots[0] if roots else instrs[-1]
+        target = root
+        if root.op in ("bitcast", "convert", "copy"):
+            args = re.findall(r"%([\w.\-]+)", root.rest)
+            for ins in instrs:
+                if args and ins.name == args[0]:
+                    target = ins
+                    break
+        if target.op != "dynamic-update-slice":
+            return None
+        args = re.findall(r"%([\w.\-]+)", target.rest.split("), ")[0])
+        if len(args) > 1 and args[1] in symtab_f:
+            return size_fn(symtab_f[args[1]])
+        return size_fn(target.type_str)
+
+    def comp_cost(name: str, stack=(), include_bytes: bool = True) -> HloCost:
+        key = (name, include_bytes)
+        if key in memo:
+            return memo[key]
+        if name not in comps or name in stack:
+            return HloCost()
+        total = HloCost()
+        symtab = {i.name: i.type_str for i in comps[name]}
+        for ins in comps[name]:
+            op = ins.op
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:  # XLA annotates scans: known_trip_count
+                    trips = float(mt.group(1))
+                elif cond and cond.group(1) in comps:
+                    trips = _loop_trip_count(comps[cond.group(1)])
+                else:
+                    trips = 1.0
+                if body:
+                    sub = comp_cost(body.group(1), stack + (name,),
+                                    include_bytes=include_bytes)
+                    total = total.merged(sub, mult=trips)
+                    total.loop_trips[body.group(1)] = trips
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "scatter", "sort", "conditional",
+                      "select-and-scatter", "async-start"):
+                # fusion internals never materialize to HBM: recurse for
+                # FLOPs only; bytes are charged once at this call site.
+                sub_bytes = op in ("call", "conditional")
+                for sub_name in re.findall(
+                        r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-]+)",
+                        ins.rest):
+                    if sub_name in comps:
+                        total = total.merged(comp_cost(
+                            sub_name, stack + (name,),
+                            include_bytes=include_bytes and sub_bytes))
+            # --- flops --------------------------------------------------
+            if op == "dot":
+                total.flops += _dot_flops(ins, symtab)
+            elif op == "convolution":
+                total.flops += _conv_flops(ins, symtab)
+            # --- collectives ---------------------------------------------
+            base = op.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                byts = _shape_bytes(ins.type_str)
+                total.collective_bytes += byts
+                total.collective_bytes_bf16eq += _shape_bytes_bf16eq(ins.type_str)
+                total.collective_counts[base] = (
+                    total.collective_counts.get(base, 0) + 1)
+                total.collective_bytes_by_kind[base] = (
+                    total.collective_bytes_by_kind.get(base, 0) + byts)
+            # --- bytes ----------------------------------------------------
+            if include_bytes and op not in _SKIP_BYTES_OPS:
+                arg_str = ins.rest.split("), ")[0]
+                arg_names = [a for a in re.findall(r"%([\w.\-]+)", arg_str)
+                             if a in symtab]
+
+                def charge(size_fn):
+                    res_b = size_fn(ins.type_str)
+                    if op in _SLICING:
+                        return 2 * res_b        # read window + write out
+                    if op == "dynamic-update-slice":
+                        upd = (size_fn(symtab[arg_names[1]])
+                               if len(arg_names) > 1 else res_b)
+                        return 2 * upd          # read update + write window
+                    if op == "fusion":
+                        called = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                        cname = called.group(1) if called else None
+                        upd = (_dus_root_update_bytes(cname, size_fn)
+                               if cname else None)
+                        reads = (_fusion_param_read_bytes(cname, size_fn)
+                                 if cname else None) or {}
+                        if upd is not None:
+                            # in-place DUS-rooted fusion: only the updated
+                            # window is computed, whatever fused in.
+                            b = 2 * upd
+                            for i, a in enumerate(arg_names):
+                                ab = size_fn(symtab[a])
+                                b += min(reads.get(i, ab), upd, ab)
+                            return b
+                        return res_b + sum(
+                            reads.get(i, size_fn(symtab[a]))
+                            for i, a in enumerate(arg_names))
+                    return res_b + sum(size_fn(symtab[a])
+                                       for a in arg_names)
+
+                total.bytes_accessed += charge(_shape_bytes)
+                total.bytes_bf16eq += charge(_shape_bytes_bf16eq)
+        memo[key] = total
+        return total
+
+    return comp_cost(entry)

@@ -1,0 +1,12 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — unit
+tests must see the single real CPU device; multi-device behaviour is tested
+via subprocess scripts (tests/test_distributed.py) that set the flag before
+importing jax."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

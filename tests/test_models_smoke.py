@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs of every
+assigned family run one forward/train step on CPU with shape + finiteness
+asserts, plus cache-decode vs teacher-forced equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config, \
+    shape_applicable
+from repro.models.model import build_model, count_params
+
+
+def _batch_for(cfg, b=2, s=16, key=jax.random.PRNGKey(0)):
+    if cfg.family == "audio":
+        return {"audio_embed": jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
+                                         jnp.bfloat16),
+                "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        return {"patches": jax.random.normal(
+                    key, (b, cfg.n_patches, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+
+    loss = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    grads = jax.grad(model.loss)(params, batch)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), \
+            f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, remat=False)
+    params = model.init_params(jax.random.PRNGKey(0))
+    b, s = 2, 8
+    batch = _batch_for(cfg, b, s)
+    logits, cache = model.prefill(params, batch, max_len=s + 4)
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    total = s + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits2, cache2 = model.decode_step(params, tok, cache,
+                                        jnp.asarray(total, jnp.int32))
+    assert logits2.shape[0] == b and logits2.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "minicpm3-4b",
+                                  "zamba2-7b", "xlstm-350m",
+                                  "kimi-k2-1t-a32b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Greedy continuation via the cache == argmax of the full forward.
+
+    Covers GQA, MLA, mamba2+shared-attn hybrid, xLSTM and MoE cache paths.
+    """
+    cfg = get_smoke_config(arch).scaled(dtype="float32")   # tight numerics
+    if cfg.moe is not None:
+        # token-dropping MoE is batch-composition-dependent; pin capacity high
+        import dataclasses
+        cfg = cfg.scaled(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg, remat=False)
+    params = model.init_params(jax.random.PRNGKey(1))
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                cfg.vocab_size)
+    # full forward logits at the last position
+    logits_full, _ = model.prefill(params, {"tokens": tokens}, max_len=s + 1)
+    # prefill on the prefix then decode the last token
+    logits_pre, cache = model.prefill(
+        params, {"tokens": tokens[:, :-1]}, max_len=s + 1)
+    logits_dec, _ = model.decode_step(
+        params, tokens[:, -1:], cache, jnp.asarray(s - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32), atol=2e-3, rtol=2e-3)
+
+
+def test_full_config_param_counts():
+    """Abstract (eval_shape) parameter counts match the published sizes."""
+    expect = {
+        "qwen3-32b": (30e9, 36e9),
+        "qwen3-14b": (13e9, 16e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.1e12),
+        "qwen3-moe-235b-a22b": (2.2e11, 2.5e11),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+        "xlstm-350m": (3.0e8, 4.0e8),
+        "whisper-tiny": (3e7, 6e7),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(build_model(get_config(arch)))
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_shape_applicability_matrix():
+    """40 cells: long_500k only for sub-quadratic archs."""
+    runnable = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, reason = shape_applicable(cfg, shape)
+            if shape.name == "long_500k":
+                assert ok == (arch in ("xlstm-350m", "zamba2-7b")), arch
+                assert ok or reason
+            else:
+                assert ok
+            runnable += ok
+    assert runnable == 32
+
+
+def test_moe_routing_mass_conservation():
+    """Combine weights <= 1 per token; == 1 when capacity is ample."""
+    import dataclasses
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    cfg = cfg.scaled(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    from repro.models.mlp import init_moe, moe_forward
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    y = moe_forward(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))

@@ -1,0 +1,49 @@
+"""Pod-scale partitioner: model graphs, stage assignments, MoE skew."""
+
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core import PodSystem, validate_monotone
+from repro.core.partitioner import (model_graph, partition_model,
+                                    stage_assignment_to_layers)
+
+
+def test_model_graph_structure():
+    cfg = get_config("qwen3-32b")
+    g = model_graph(cfg, SHAPES["train_4k"])
+    assert g.n == cfg.n_layers + 2          # embed + blocks + head
+    assert g.max_in_degree == 1             # chain
+    assert g.param_bytes.sum() > 60e9       # ~32B params in bf16
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "kimi-k2-1t-a32b", "zamba2-7b"])
+@pytest.mark.parametrize("method", ["exact", "compiler", "list"])
+def test_partition_valid(arch, method):
+    cfg = get_config(arch)
+    assign, ev, g = partition_model(cfg, SHAPES["train_4k"], 8, method=method,
+                                    mesh_slice=32)
+    assert validate_monotone(g, assign, 8)
+    stages = stage_assignment_to_layers(cfg, assign)
+    covered = sorted(b for s in stages for b in s)
+    assert covered == list(range(cfg.n_layers))
+
+
+def test_exact_beats_compiler_on_moe():
+    """MoE param/FLOP skew: the paper's memory+comm-aware exact partition
+    strictly beats the param-balancing compiler emulation."""
+    cfg = get_config("kimi-k2-1t-a32b")
+    _, ev_exact, _ = partition_model(cfg, SHAPES["train_4k"], 8,
+                                     method="exact", mesh_slice=64)
+    _, ev_comp, _ = partition_model(cfg, SHAPES["train_4k"], 8,
+                                    method="compiler", mesh_slice=64)
+    assert ev_exact.bottleneck_s <= ev_comp.bottleneck_s * (1 + 1e-9)
+
+
+def test_shared_attn_params_counted_once():
+    cfg = get_config("zamba2-7b")
+    g = model_graph(cfg, SHAPES["train_4k"])
+    # 13 "A" call sites but only one carries the shared parameter bytes
+    a_nodes = [i for i, nm in enumerate(g.names) if nm.startswith("A")]
+    with_params = [i for i in a_nodes if g.param_bytes[i] > 0]
+    assert len(a_nodes) >= 12 and len(with_params) == 1

@@ -1,0 +1,121 @@
+"""Scheduler invariants: exactness, validity, repair, rho — the paper's
+algorithmic core, property-tested."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CompGraph, EDGETPU, PipelineSystem, brute_force_monotone,
+    compiler_partition, evaluate_schedule, exact_bb, exact_dp, list_schedule,
+    repair, rho, sample_dag, validate_monotone,
+)
+from repro.core.exact import order_from_assignment
+
+
+def graphs(draw, max_n=12, max_deg=4):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n = draw(st.integers(4, max_n))
+    deg = draw(st.integers(1, max_deg))
+    return sample_dag(np.random.default_rng(seed), n=n, deg=min(deg, n - 2))
+
+
+graph_strategy = st.composite(graphs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(graph_strategy(), st.integers(2, 4))
+def test_exact_dp_is_valid_and_matches_eval(g, k):
+    sys_ = PipelineSystem(n_stages=k)
+    assign, obj = exact_dp(g, k, sys_)
+    assert validate_monotone(g, assign, k)
+    ev = evaluate_schedule(g, assign, sys_)
+    assert ev.bottleneck_s == pytest.approx(obj, rel=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_strategy(max_n=8, max_deg=3), st.integers(2, 3))
+def test_bb_matches_brute_force(g, k):
+    sys_ = PipelineSystem(n_stages=k)
+    _, b_bb = exact_bb(g, k, sys_, time_budget_s=5.0)
+    _, b_bf = brute_force_monotone(g, k, sys_)
+    assert b_bb == pytest.approx(b_bf, rel=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_strategy(max_n=10), st.integers(2, 4))
+def test_bb_never_worse_than_dp(g, k):
+    sys_ = PipelineSystem(n_stages=k)
+    _, b_dp = exact_dp(g, k, sys_)
+    _, b_bb = exact_bb(g, k, sys_, time_budget_s=5.0)
+    assert b_bb <= b_dp * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(graph_strategy(), st.integers(2, 5))
+def test_heuristics_valid(g, k):
+    sys_ = PipelineSystem(n_stages=k)
+    for h in (compiler_partition(g, k, sys_), list_schedule(g, k, sys_)):
+        assert validate_monotone(g, h, k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(graph_strategy(), st.integers(2, 4), st.integers(0, 2**31 - 1))
+def test_exact_dp_beats_random_contiguous(g, k, seed):
+    """DP optimality over its own search space: any random contiguous
+    segmentation of the node order is no better."""
+    sys_ = PipelineSystem(n_stages=k)
+    _, obj = exact_dp(g, k, sys_)
+    r = np.random.default_rng(seed)
+    cuts = np.sort(r.integers(0, g.n + 1, size=k - 1))
+    assign = np.zeros(g.n, dtype=np.int64)
+    prev = 0
+    for s, c in enumerate(list(cuts) + [g.n]):
+        assign[prev:c] = s
+        prev = c
+    ev = evaluate_schedule(g, assign, sys_)
+    assert obj <= ev.bottleneck_s * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(graph_strategy(), st.integers(2, 4), st.integers(0, 2**31 - 1))
+def test_repair_always_valid_and_idempotent(g, k, seed):
+    r = np.random.default_rng(seed)
+    assign = r.integers(0, k, size=g.n)
+    fixed = repair(g, assign, k)
+    assert validate_monotone(g, fixed, k)
+    assert np.array_equal(repair(g, fixed, k), fixed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_strategy(), st.integers(2, 4))
+def test_rho_of_gamma_reproduces_exact(g, k):
+    """rho(gamma) == the exact schedule (a perfectly-imitating policy scores
+    reward 1 AND deploys the optimum)."""
+    sys_ = PipelineSystem(n_stages=k)
+    assign, obj = exact_dp(g, k, sys_)
+    gamma = order_from_assignment(assign)
+    again = rho(g, gamma, k, sys_)
+    ev = evaluate_schedule(g, again, sys_)
+    assert ev.bottleneck_s == pytest.approx(obj, rel=1e-9)
+
+
+def test_repair_pushes_forward_minimally():
+    # chain 0->1->2 with violation at node 2
+    g = CompGraph(parents=[[], [0], [1]], flops=[1, 1, 1],
+                  param_bytes=[0, 0, 0], out_bytes=[1, 1, 1])
+    fixed = repair(g, np.array([1, 2, 0]), 3)
+    assert validate_monotone(g, fixed, 3)
+    assert fixed[0] == 1 and fixed[1] == 2 and fixed[2] == 2
+
+
+def test_evaluate_schedule_terms():
+    g = CompGraph(parents=[[], [0]], flops=[1e9, 1e9],
+                  param_bytes=[9 * 2**20, 0], out_bytes=[1e6, 1e6])
+    sys_ = PipelineSystem(n_stages=2)
+    ev = evaluate_schedule(g, np.array([0, 1]), sys_)
+    # stage 0 exceeds the 8 MB cache -> off-cache penalty
+    assert ev.off_cache_bytes[0] == pytest.approx(2**20)
+    assert ev.off_cache_bytes[1] == 0
+    # stage 1 pays the boundary transfer of node 0's output
+    assert ev.stage_in_bytes[1] == pytest.approx(1e6)

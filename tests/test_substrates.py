@@ -1,0 +1,162 @@
+"""Data pipeline, optimizer, checkpoint, runtime fault-tolerance."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.checkpoint import CheckpointManager
+from repro.data import LabeledDagDataset, TokenStream
+from repro.runtime import StepTimer, TrainLoop, TrainLoopConfig
+
+
+# ------------------------------ data --------------------------------- #
+def test_token_stream_deterministic_and_restartable():
+    s1 = TokenStream(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+    s2 = TokenStream(vocab_size=1000, seq_len=32, global_batch=8, seed=7)
+    for step in (0, 5, 123):
+        np.testing.assert_array_equal(s1.batch_at(step)["tokens"],
+                                      s2.batch_at(step)["tokens"])
+    assert not np.array_equal(s1.batch_at(0)["tokens"],
+                              s1.batch_at(1)["tokens"])
+
+
+def test_token_stream_host_sharding_partitions_global_batch():
+    full = TokenStream(vocab_size=50, seq_len=8, global_batch=8, seed=1)
+    tokens = full.batch_at(3)["tokens"]
+    assert tokens.shape == (8, 8)
+    assert tokens.min() >= 0 and tokens.max() < 50
+    sharded = [TokenStream(vocab_size=50, seq_len=8, global_batch=8,
+                           n_hosts=4, host_id=h, seed=1) for h in range(4)]
+    for h, s in enumerate(sharded):
+        assert s.batch_at(3)["tokens"].shape == (2, 8)
+
+
+def test_dag_dataset_cache_roundtrip(tmp_path):
+    ds = LabeledDagDataset(count=24, n=12, n_stages=3, seed=5,
+                           label_method="dp", cache_dir=tmp_path)
+    d1 = ds.build()
+    ds2 = LabeledDagDataset(count=24, n=12, n_stages=3, seed=5,
+                            label_method="dp", cache_dir=tmp_path)
+    d2 = ds2.build()
+    np.testing.assert_array_equal(d1["label_assign"], d2["label_assign"])
+    b = ds.batch(0, 8)
+    assert b.feats.shape[0] == 8
+
+
+# ----------------------------- optim --------------------------------- #
+def test_adamw_matches_numpy_reference():
+    opt = optim.adamw(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01)
+    p = {"w": jnp.asarray([[1.0, -2.0], [3.0, 0.5]], jnp.float32)}
+    g = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]], jnp.float32)}
+    state = opt.init(p)
+    p1, state = opt.update(g, state, p)
+
+    # numpy AdamW, one step
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.001 * np.asarray(g["w"]) ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.999)
+    want = np.asarray(p["w"]) - 1e-2 * (
+        mhat / (np.sqrt(vhat) + 1e-8) + 0.01 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(p1["w"]), want, rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3.0}
+    clipped, norm = optim.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(6.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_int8_compress_error_feedback_reduces_bias():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(512,)), jnp.float32)
+    q, scale = optim.int8_compress(x)
+    back = optim.int8_decompress(q, scale)
+    err = x - back
+    assert float(jnp.max(jnp.abs(err))) <= float(scale) * 0.51 + 1e-7
+
+
+# --------------------------- checkpoint ------------------------------ #
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda x, s=step: x + s, tree))
+    assert mgr.all_steps() == [20, 30]
+    restored = mgr.restore(30, tree)
+    np.testing.assert_allclose(np.asarray(restored["w"], np.float32),
+                               np.asarray(tree["w"]) + 30)
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    tree = {"w": jnp.zeros((128, 128))}
+    mgr.save(1, tree, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    # a stale .tmp dir from a "crash" is ignored
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert mgr.latest_step() == 1
+
+
+# ----------------------------- runtime ------------------------------- #
+def _make_loop(tmp_path, total_steps, fail_at=None, save_every=5):
+    opt = optim.sgd(lr=0.1)
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    opt_state = opt.init(params)
+    calls = {"n": 0}
+
+    def step_fn(params, opt_state, batch):
+        calls["n"] += 1
+        if fail_at is not None and calls["n"] == fail_at:
+            raise RuntimeError("injected failure")
+        grads = {"w": batch["x"]}
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": jnp.sum(params["w"])}
+
+    def batch_fn(step):
+        return {"x": jnp.full((4,), float(step + 1))}
+
+    return TrainLoop(step_fn, batch_fn, params, opt_state,
+                     TrainLoopConfig(total_steps=total_steps,
+                                     save_every=save_every, log_every=1000,
+                                     async_save=False),
+                     ckpt_dir=tmp_path), calls
+
+
+def test_train_loop_resume_bit_exact(tmp_path):
+    # uninterrupted run
+    loop_a, _ = _make_loop(tmp_path / "a", total_steps=12)
+    out_a = loop_a.run()
+    # interrupted at step 7 (after the step-5 checkpoint), then resumed
+    loop_b, _ = _make_loop(tmp_path / "b", total_steps=7)
+    loop_b.run()
+    loop_b2, _ = _make_loop(tmp_path / "b", total_steps=12)
+    out_b = loop_b2.run()
+    np.testing.assert_array_equal(np.asarray(loop_a.params["w"]),
+                                  np.asarray(loop_b2.params["w"]))
+    assert out_a["final_step"] == out_b["final_step"] == 12
+
+
+def test_train_loop_retries_failed_step(tmp_path):
+    loop, calls = _make_loop(tmp_path, total_steps=10, fail_at=7)
+    out = loop.run()
+    assert out["final_step"] == 10
+    assert calls["n"] >= 11       # one extra call due to the retry
+
+
+def test_straggler_detection():
+    t = StepTimer(ema=0.5, threshold=2.0, patience=2)
+    for _ in range(10):
+        t.record(0.1)
+    assert not t.is_straggling
+    t.record(1.0)
+    t.record(1.0)
+    assert t.is_straggling

@@ -1,0 +1,78 @@
+"""End-to-end behaviour: the full RESPECT flow on real model graphs.
+
+Train a small agent briefly on synthetic graphs, then schedule the Table-I
+DNNs on the simulated pipelined Edge TPU system and check the paper's
+qualitative claims hold: post-repair validity everywhere, near-exact quality
+for the trained agent on the training distribution, and exact >= compiler
+heuristic on the real models (the gap RESPECT learns to close).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EDGETPU, MODEL_SPECS, PipelineSystem,
+                        RespectScheduler, build_model_graph,
+                        compiler_partition, evaluate_schedule, exact_dp,
+                        sample_batch, validate_monotone)
+from repro.core.rl import RLTrainer, pack_graphs
+
+
+def test_table1_statistics_exact():
+    for name, (v, deg, depth, *_rest) in MODEL_SPECS.items():
+        g = build_model_graph(name)
+        assert g.n == v, name
+        assert g.max_in_degree == deg, name
+        assert g.depth == depth, name
+
+
+@pytest.mark.parametrize("stages", [4, 5, 6])
+def test_exact_beats_or_ties_compiler_on_all_models(stages):
+    sys_ = EDGETPU.with_stages(stages)
+    wins = 0
+    for name in MODEL_SPECS:
+        g = build_model_graph(name)
+        _, b_exact = exact_dp(g, stages, sys_)
+        ev_comp = evaluate_schedule(g, compiler_partition(g, stages, sys_), sys_)
+        assert b_exact <= ev_comp.bottleneck_s * (1 + 1e-9), name
+        wins += b_exact < ev_comp.bottleneck_s * (1 - 1e-6)
+    assert wins >= 5    # the gap exists on most models (paper Fig. 4)
+
+
+def test_untrained_scheduler_is_valid_on_real_models():
+    sched = RespectScheduler.init(seed=0, hidden=32)
+    for name in ("ResNet50", "DenseNet121", "InceptionResNetv2"):
+        g = build_model_graph(name)
+        res = sched.schedule(g, 4)
+        assert validate_monotone(g, res.assignment, 4)
+
+
+def test_end_to_end_training_then_deployment():
+    """Short training -> greedy reward improves -> deployed schedules stay
+    valid and quality moves toward exact on held-out graphs."""
+    sys4 = PipelineSystem(n_stages=4)
+    train_graphs = sample_batch(np.random.default_rng(0), 24)
+    held_out = sample_batch(np.random.default_rng(99), 8)
+    batch = pack_graphs(train_graphs, 4, sys4, label_method="dp")
+
+    tr = RLTrainer(n_stages=4, system=sys4, hidden=32, lr=3e-3)
+    r0 = tr.evaluate(batch)["reward_greedy"]
+    key = jax.random.PRNGKey(1)
+    for i in range(25):
+        key, k = jax.random.split(key)
+        tr.train_step(batch, k)
+        if i % 8 == 7:
+            tr.maybe_update_baseline(batch)
+    r1 = tr.evaluate(batch)["reward_greedy"]
+    assert r1 >= r0 - 1e-3
+
+    sched = RespectScheduler(tr.params)
+    gaps = []
+    for g in held_out:
+        res = sched.schedule(g, 4, sys4)
+        assert validate_monotone(g, res.assignment, 4)
+        ev = evaluate_schedule(g, res.assignment, sys4)
+        _, b_exact = exact_dp(g, 4, sys4)
+        gaps.append(ev.bottleneck_s / max(b_exact, 1e-12))
+    # RL schedules are within a sane factor of exact even after a tiny run
+    assert np.median(gaps) < 3.0
