@@ -1,0 +1,122 @@
+"""Batched scheduling engine throughput: ``schedule_many`` vs a loop of
+``schedule``.
+
+Two serving scenarios on CPU, both verified to produce *identical*
+assignments through either API:
+
+* **distinct** — 64 unique synthetic |V|=30 DAGs (every request is a new
+  graph): measures the bucketed vmapped decode against 64 single-graph
+  dispatches.  Decode compute is identical, so the win is dispatch
+  amortization + GEMV->GEMM efficiency (~2-3x on a 2-core CPU box).
+* **traffic** — 64 requests drawn from a pool of 8 distinct DAGs (the
+  paper's deployment reality: a fixed zoo of DNNs re-scheduled
+  constantly): ``schedule_many`` dedups by content hash inside the call
+  and serves repeats from the schedule cache, while the single-graph API
+  must re-solve every request.
+
+The agent uses hidden=128, the container-scale deployment config of
+``examples/train_respect.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import RespectScheduler, sample_batch
+
+from .common import emit
+
+N_STAGES = 4
+HIDDEN = 128
+
+
+def _best_time(fn, repeat: int) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, out_json: str | Path | None = None):
+    batch = 16 if smoke else 64
+    pool_size = 4 if smoke else 8
+    repeat = 2 if smoke else 3
+    sched = RespectScheduler.init(seed=0, hidden=HIDDEN)
+    graphs = sample_batch(np.random.default_rng(0), batch, n=30)
+    trace = [graphs[i % pool_size] for i in range(batch)]
+
+    # warm up compile caches for every shape both paths will touch
+    sched.schedule(graphs[0], N_STAGES)
+    sched.schedule_many(graphs, N_STAGES, use_cache=False)
+
+    # --- distinct graphs ------------------------------------------------ #
+    t_single = _best_time(
+        lambda: [sched.schedule(g, N_STAGES) for g in graphs], repeat)
+    t_cold = _best_time(
+        lambda: sched.schedule_many(graphs, N_STAGES, use_cache=False),
+        repeat)
+    res_single = [sched.schedule(g, N_STAGES) for g in graphs]
+    res_batch = sched.schedule_many(graphs, N_STAGES, use_cache=False)
+    match_distinct = all(
+        np.array_equal(a.assignment, b.assignment)
+        for a, b in zip(res_single, res_batch))
+
+    # --- repeated-traffic trace ---------------------------------------- #
+    t_trace_single = _best_time(
+        lambda: [sched.schedule(g, N_STAGES) for g in trace], repeat)
+
+    def trace_batched():
+        sched.clear_cache()
+        return sched.schedule_many(trace, N_STAGES)
+
+    t_trace_batched = _best_time(trace_batched, repeat)
+    res_trace_single = [sched.schedule(g, N_STAGES) for g in trace]
+    res_trace_batch = trace_batched()
+    match_trace = all(
+        np.array_equal(a.assignment, b.assignment)
+        for a, b in zip(res_trace_single, res_trace_batch))
+
+    gps_single = batch / t_single
+    gps_cold = batch / t_cold
+    gps_traffic_single = batch / t_trace_single
+    gps_traffic = batch / t_trace_batched
+    speedup_cold = t_single / t_cold
+    speedup_traffic = t_trace_single / t_trace_batched
+
+    lines = [
+        emit("batched/distinct/single_loop", t_single / batch * 1e6,
+             f"graphs_per_sec={gps_single:.1f}"),
+        emit("batched/distinct/schedule_many", t_cold / batch * 1e6,
+             f"graphs_per_sec={gps_cold:.1f};speedup={speedup_cold:.2f}x;"
+             f"match_exact={match_distinct}"),
+        emit("batched/traffic/single_loop", t_trace_single / batch * 1e6,
+             f"graphs_per_sec={gps_traffic_single:.1f};pool={pool_size}"),
+        emit("batched/traffic/schedule_many", t_trace_batched / batch * 1e6,
+             f"graphs_per_sec={gps_traffic:.1f};"
+             f"speedup={speedup_traffic:.2f}x;match_exact={match_trace}"),
+    ]
+
+    summary = {
+        "batch": batch,
+        "pool_size": pool_size,
+        "hidden": HIDDEN,
+        "n_stages": N_STAGES,
+        "graphs_per_sec_single": gps_single,
+        "graphs_per_sec_batched_cold": gps_cold,
+        "graphs_per_sec_traffic_single": gps_traffic_single,
+        "graphs_per_sec_traffic_batched": gps_traffic,
+        "speedup_cold": speedup_cold,
+        "speedup_traffic": speedup_traffic,
+        "match_exact_distinct": bool(match_distinct),
+        "match_exact_traffic": bool(match_trace),
+    }
+    if out_json is not None:
+        Path(out_json).write_text(json.dumps(summary, indent=2))
+        print(f"# wrote {out_json}")
+    return summary

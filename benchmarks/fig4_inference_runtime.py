@@ -11,7 +11,7 @@ from repro.core import (EDGETPU, MODEL_SPECS, build_model_graph,
                         compiler_partition, evaluate_schedule, exact_dp,
                         validate_monotone)
 
-from .common import emit, load_agent, timeit
+from .common import emit, load_agent
 
 
 def run():

@@ -2,6 +2,8 @@
 beyond-paper pod-scale benches.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+    PYTHONPATH=src python -m benchmarks.run --smoke        # CI: fast subset
+                                                          # + BENCH_smoke.json
 """
 
 import argparse
@@ -12,29 +14,46 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 BENCHES = ["table1", "fig3", "fig4", "fig5", "partitioner", "kernels",
-           "roofline"]
+           "roofline", "batched"]
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced batched-engine bench; writes the per-PR "
+                         "perf-trajectory artifact (see --out-json)")
+    ap.add_argument("--out-json", default="BENCH_smoke.json",
+                    help="summary artifact path for --smoke")
     args = ap.parse_args()
-    want = args.only.split(",") if args.only else BENCHES
 
-    from . import (fig3_solving_time, fig4_inference_runtime,
-                   fig5_gap_to_optimal, kernels_bench, partitioner_bench,
-                   roofline_table, table1_graphs)
+    from . import (batched_schedule_bench, fig3_solving_time,
+                   fig4_inference_runtime, fig5_gap_to_optimal, kernels_bench,
+                   partitioner_bench, roofline_table, table1_graphs)
     mods = {
         "table1": table1_graphs, "fig3": fig3_solving_time,
         "fig4": fig4_inference_runtime, "fig5": fig5_gap_to_optimal,
         "partitioner": partitioner_bench, "kernels": kernels_bench,
-        "roofline": roofline_table,
+        "roofline": roofline_table, "batched": batched_schedule_bench,
     }
+    if args.smoke and args.only:
+        ap.error("--smoke runs the fixed CI subset; drop --only or --smoke")
     print("name,us_per_call,derived")
     t0 = time.time()
-    for name in want:
-        mods[name].run()
+    if args.smoke:
+        batched_schedule_bench.run(smoke=True, out_json=args.out_json)
+    else:
+        want = args.only.split(",") if args.only else BENCHES
+        unknown = [n for n in want if n not in mods]
+        if unknown:
+            ap.error(f"unknown bench(es) {','.join(unknown)}; "
+                     f"choose from: {','.join(BENCHES)}")
+        for name in want:
+            if name == "batched":
+                mods[name].run(out_json=args.out_json)
+            else:
+                mods[name].run()
     print(f"# total {time.time()-t0:.1f}s")
     return 0
 

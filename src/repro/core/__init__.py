@@ -13,6 +13,7 @@ Layers (bottom-up):
   stages on a v5e mesh).
 """
 
+from .batching import BucketedDecoder, PaddedGraphBatch, bucket_for, pack_padded  # noqa: F401
 from .costmodel import EDGETPU, PipelineSystem, PodSystem, evaluate_schedule  # noqa: F401
 from .dnn_graphs import MODEL_SPECS, all_model_graphs, build_model_graph  # noqa: F401
 from .embedding import embed_dim, embed_graph  # noqa: F401

@@ -1,0 +1,216 @@
+"""Batched decode engine: size buckets, padded packs, jitted bucket fns.
+
+The PtrNet decode is a sequential scan, so scheduling one graph per call
+leaves the accelerator idle between tiny dispatches.  This module turns a
+heterogeneous list of :class:`CompGraph` into a handful of fixed-shape
+XLA programs:
+
+* **size bucketing** — a graph with ``n`` nodes is padded up to the next
+  power-of-two bucket (``bucket_for``), so arbitrary request mixes compile
+  at most ``log2(n_max)`` decode programs instead of one per distinct size;
+* **padded packing** — :func:`pack_padded` stacks embeddings + parent
+  matrices into a :class:`PaddedGraphBatch` carrying ``n_valid`` per graph;
+  :mod:`repro.core.ptrnet`'s pad-aware masking guarantees padded slots are
+  never pointed at and the valid prefix matches the unpadded decode;
+* **LRU of compiled fns** — :class:`BucketedDecoder` keeps the jitted
+  vmapped decode for the most recent (bucket, batch-bucket) shapes and
+  evicts cold shapes, bounding compile-cache growth under shifting traffic.
+
+The batch dimension is bucketed to powers of two as well (short batches are
+padded with ``n_valid = 0`` rows), so a serving loop with fluctuating batch
+sizes re-uses the same compiled programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ptrnet
+from .embedding import embed_graph
+from .graph import CompGraph
+
+__all__ = [
+    "bucket_for",
+    "bucketize",
+    "PaddedGraphBatch",
+    "pack_padded",
+    "BucketedDecoder",
+]
+
+MIN_BUCKET = 8
+
+
+def bucket_for(n: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two >= n (with a floor so tiny graphs share)."""
+    if n < 1:
+        raise ValueError("graph must have at least one node")
+    return max(min_bucket, 1 << (n - 1).bit_length())
+
+
+def bucketize(
+    graphs: list[CompGraph], min_bucket: int = MIN_BUCKET
+) -> dict[int, list[int]]:
+    """Group graph *indices* by their size bucket (insertion order kept)."""
+    buckets: dict[int, list[int]] = {}
+    for i, g in enumerate(graphs):
+        buckets.setdefault(bucket_for(g.n, min_bucket), []).append(i)
+    return buckets
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PaddedGraphBatch:
+    """Fixed-shape pack of B graphs padded to a common node count."""
+
+    feats: jnp.ndarray       # (B, bucket_n, F) embedding rows, zero padded
+    parent_mat: jnp.ndarray  # (B, bucket_n, D) int32, -1 padded
+    n_valid: jnp.ndarray     # (B,) int32 real node count per graph
+
+    def tree_flatten(self):
+        return (self.feats, self.parent_mat, self.n_valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch(self) -> int:
+        return self.feats.shape[0]
+
+    @property
+    def bucket_n(self) -> int:
+        return self.feats.shape[1]
+
+
+def pack_padded(
+    graphs: list[CompGraph],
+    bucket_n: int | None = None,
+    max_deg: int = 6,
+    min_bucket: int = MIN_BUCKET,
+) -> PaddedGraphBatch:
+    """Embed + pad a list of graphs to a common ``bucket_n`` node count."""
+    if not graphs:
+        raise ValueError("empty graph list")
+    n_max = max(g.n for g in graphs)
+    if bucket_n is None:
+        bucket_n = bucket_for(n_max, min_bucket)
+    if n_max > bucket_n:
+        raise ValueError(f"graph with {n_max} nodes exceeds bucket {bucket_n}")
+    B = len(graphs)
+    feat_w = None
+    feats = None
+    pmat = np.full((B, bucket_n, max_deg), -1, dtype=np.int32)
+    n_valid = np.zeros(B, dtype=np.int32)
+    for i, g in enumerate(graphs):
+        f = embed_graph(g, max_deg)
+        if feats is None:
+            feat_w = f.shape[1]
+            feats = np.zeros((B, bucket_n, feat_w), dtype=np.float32)
+        feats[i, : g.n] = f
+        pmat[i, : g.n] = g.parent_matrix(max_deg)
+        n_valid[i] = g.n
+    return PaddedGraphBatch(
+        feats=jnp.asarray(feats),
+        parent_mat=jnp.asarray(pmat),
+        n_valid=jnp.asarray(n_valid),
+    )
+
+
+class _LRU:
+    """Tiny LRU keyed cache (compiled decode fns are the values)."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = maxsize
+        self._d: OrderedDict = OrderedDict()
+
+    def get(self, key):
+        if key not in self._d:
+            return None
+        self._d.move_to_end(key)
+        return self._d[key]
+
+    def put(self, key, value):
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __len__(self):
+        return len(self._d)
+
+    def __contains__(self, key):
+        return key in self._d
+
+
+class BucketedDecoder:
+    """Greedy-decode many graphs through shape-bucketed jitted programs.
+
+    One instance owns the LRU of compiled per-(bucket_n, bucket_b) decode
+    fns; `RespectScheduler` holds one for its lifetime so repeated
+    `schedule_many` calls hit warm programs.
+    """
+
+    def __init__(self, mask_infeasible: bool = True, max_deg: int = 6,
+                 min_bucket: int = MIN_BUCKET, max_compiled: int = 16):
+        self.mask_infeasible = mask_infeasible
+        self.max_deg = max_deg
+        self.min_bucket = min_bucket
+        self._fns = _LRU(max_compiled)
+
+    # ------------------------------------------------------------------ #
+    def _decode_fn(self, bucket_n: int, bucket_b: int):
+        key = (bucket_n, bucket_b)
+        fn = self._fns.get(key)
+        if fn is None:
+            mask_infeasible = self.mask_infeasible
+
+            def batched(params, feats, pmat, n_valid):
+                def one(f, p, nv):
+                    order, _, _ = ptrnet.greedy_order(
+                        params, f, p, mask_infeasible, nv)
+                    return order
+
+                return jax.vmap(one)(feats, pmat, n_valid)
+
+            fn = jax.jit(batched)
+            self._fns.put(key, fn)
+        return fn
+
+    @property
+    def compiled_shapes(self) -> list[tuple[int, int]]:
+        return list(self._fns._d.keys())
+
+    # ------------------------------------------------------------------ #
+    def greedy_orders(self, params, graphs: list[CompGraph]) -> list[np.ndarray]:
+        """Decode every graph; returns per-graph orders (length ``g.n``)."""
+        orders: list[np.ndarray | None] = [None] * len(graphs)
+        for bucket_n, idxs in bucketize(graphs, self.min_bucket).items():
+            batch = pack_padded(
+                [graphs[i] for i in idxs], bucket_n, self.max_deg)
+            b = batch.batch
+            bucket_b = 1 << (b - 1).bit_length()
+            if bucket_b > b:  # pad the batch dim with n_valid = 0 rows
+                pad = bucket_b - b
+                batch = PaddedGraphBatch(
+                    feats=jnp.concatenate(
+                        [batch.feats,
+                         jnp.zeros((pad,) + batch.feats.shape[1:],
+                                   batch.feats.dtype)]),
+                    parent_mat=jnp.concatenate(
+                        [batch.parent_mat,
+                         jnp.full((pad,) + batch.parent_mat.shape[1:], -1,
+                                  batch.parent_mat.dtype)]),
+                    n_valid=jnp.concatenate(
+                        [batch.n_valid, jnp.zeros(pad, batch.n_valid.dtype)]),
+                )
+            out = self._decode_fn(bucket_n, bucket_b)(
+                params, batch.feats, batch.parent_mat, batch.n_valid)
+            out = np.asarray(out)
+            for row, i in enumerate(idxs):
+                orders[i] = out[row, : graphs[i].n].astype(np.int64)
+        return orders

@@ -111,19 +111,24 @@ def exact_dp(
 
     k = n_stages
     # f_b[j], f_l[j]: best (bottleneck, latency) covering positions [0, j)
-    # with the current number of stages; arg[s][j]: split point.
+    # with the current number of stages; arg[s][j]: split point.  The
+    # per-j lex-argmin is vectorized over the whole (i, j) plane; C[i, j]
+    # is +inf for i > j, which excludes those split points exactly like
+    # the old per-column [: j + 1] slicing did.
     f_b = C[0].copy()
     f_l = C[0].copy()
     args = np.zeros((k, n + 1), dtype=np.int64)
-    for s in range(1, k):
-        nb = np.empty(n + 1)
-        nl = np.empty(n + 1)
-        for j in range(n + 1):
-            b = np.maximum(f_b[: j + 1], C[: j + 1, j])
-            l = f_l[: j + 1] + C[: j + 1, j]
-            i = _lex_argmin(b, l)
-            nb[j], nl[j], args[s, j] = b[i], l[i], i
-        f_b, f_l = nb, nl
+    cols = np.arange(n + 1)
+    with np.errstate(invalid="ignore"):
+        for s in range(1, k):
+            b = np.maximum(f_b[:, None], C)              # (i, j)
+            l = f_l[:, None] + C
+            m = b.min(axis=0)
+            elig = b <= m[None, :] * (1 + 1e-12) + 1e-30
+            l_el = np.where(elig, l, np.inf)
+            arg = l_el.argmin(axis=0)                    # first min latency
+            args[s] = arg
+            f_b, f_l = b[arg, cols], l_el[arg, cols]
 
     # backtrack
     assign_pos = np.empty(n, dtype=np.int64)

@@ -13,6 +13,14 @@ Everything is a plain parameter pytree + functional apply, so the whole
 decode loop jits and vmaps; the pointer/glimpse inner product is also
 implemented as a Pallas TPU kernel (``repro.kernels.ptr``) selected via
 ``impl=`` for deployment-time inference.
+
+Padded batching: every entry point accepts ``n_valid`` so graphs of
+different sizes can share one compiled (bucketed) shape.  The encoder
+freezes its latent state after ``n_valid`` rows, the pointer mask excludes
+padded slots during the first ``n_valid`` decode steps, and padded steps
+contribute exactly zero log-prob/entropy — so the valid prefix of a padded
+greedy decode emits the same order as the unpadded decode of the same
+graph (log-probs agree up to float-reduction rounding).
 """
 
 from __future__ import annotations
@@ -21,7 +29,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "init_params",
@@ -79,17 +86,36 @@ def _lstm_step(p, x, state):
     return h, c
 
 
-def encode(params, feats):
-    """feats (n, F) -> contexts C (n, H), final (h, c), projected emb (n, H)."""
+def encode(params, feats, n_valid=None):
+    """feats (n, F) -> contexts C (n, H), final (h, c), projected emb (n, H).
+
+    With ``n_valid`` the LSTM state stops updating after the first
+    ``n_valid`` rows, so the final state (the decoder seed) equals the one
+    an unpadded encode of ``feats[:n_valid]`` would produce.
+    """
     emb = feats @ params["w_in"] + params["b_in"]
     hidden = params["enc"]["wh"].shape[0]
     init = (jnp.zeros(hidden), jnp.zeros(hidden))
 
-    def step(state, x):
-        state = _lstm_step(params["enc"], x, state)
-        return state, state[0]
+    if n_valid is None:
 
-    final, contexts = jax.lax.scan(step, init, emb)
+        def step(state, x):
+            state = _lstm_step(params["enc"], x, state)
+            return state, state[0]
+
+        final, contexts = jax.lax.scan(step, init, emb)
+    else:
+        idx = jnp.arange(emb.shape[0])
+
+        def step(state, xi):
+            x, i = xi
+            new = _lstm_step(params["enc"], x, state)
+            live = i < n_valid
+            new = jax.tree.map(
+                lambda a, b: jnp.where(live, a, b), new, state)
+            return new, new[0]
+
+        final, contexts = jax.lax.scan(step, init, (emb, idx))
     return contexts, final, emb
 
 
@@ -108,6 +134,21 @@ def pointer_logits(params, C, h, mask):
     return jnp.where(mask, logits, NEG_INF)
 
 
+def _pointer_logits_hoisted(params, ref_g, ref_p, C, h, mask):
+    """`pointer_logits` with the step-invariant ``C @ W_ref`` projections
+    precomputed (``ref_g``/``ref_p``).  The projections are the dominant
+    matmuls of a decode step and don't depend on the query, so the decode
+    scan hoists them — same floating-point ops, same results."""
+    g_scores = jnp.where(
+        mask, jnp.tanh(ref_g + h @ params["glimpse"]["w_q"])
+        @ params["glimpse"]["v"], NEG_INF)
+    attn = jax.nn.softmax(g_scores)
+    glimpse = attn @ C
+    logits = jnp.tanh(ref_p + glimpse @ params["pointer"]["w_q"]) \
+        @ params["pointer"]["v"]
+    return jnp.where(mask, logits, NEG_INF)
+
+
 def decode(
     params,
     C,
@@ -118,6 +159,7 @@ def decode(
     sample_key=None,
     mask_infeasible: bool = True,
     logits_fn=None,
+    n_valid=None,
 ):
     """Run the full pointing decode (Alg. 1).
 
@@ -128,27 +170,45 @@ def decode(
       sample_key: PRNG key -> stochastic decode; None -> greedy (argmax).
       mask_infeasible: additionally mask nodes with unscheduled parents.
       logits_fn: override for the glimpse+pointer op (e.g. Pallas kernel).
+      n_valid: number of real (non-padded) nodes; the first ``n_valid``
+        steps only point at real nodes, the remaining steps consume the
+        padded slots with zero log-prob/entropy, so ``order[:n_valid]`` is
+        a permutation of the real nodes.
 
     Returns: order (n,) int32, logp (n,) per-step log-probs, entropy (n,).
     """
     n = C.shape[0]
     if logits_fn is None:
-        logits_fn = functools.partial(pointer_logits, params)
+        ref_g = C @ params["glimpse"]["w_ref"]
+        ref_p = C @ params["pointer"]["w_ref"]
+        logits_fn = functools.partial(
+            _pointer_logits_hoisted, params, ref_g, ref_p)
     keys = (
         jax.random.split(sample_key, n)
         if sample_key is not None
         else jnp.zeros((n, 2), jnp.uint32)
     )
+    valid = None if n_valid is None else jnp.arange(n) < n_valid
 
     def step(carry, key):
         state, d, visited = carry
         state = _lstm_step(params["dec"], d, state)
         h = state[0]
         mask = ~visited
+        if valid is not None:
+            mask &= valid
         if mask_infeasible:
             pvisited = jnp.where(parent_mat >= 0, visited[parent_mat.clip(0)], True)
             mask &= pvisited.all(axis=-1)
-        logits = logits_fn(C, h, mask)
+        if valid is None:
+            logits = logits_fn(C, h, mask)
+            live = True
+        else:
+            # once every real node is visited only padded slots remain:
+            # drain them (arbitrary unvisited pick) at zero logp/entropy.
+            live = mask.any()
+            mask = jnp.where(live, mask, ~visited)
+            logits = logits_fn(C, h, mask)
         logprobs = jax.nn.log_softmax(logits)
         if sample_key is not None:
             idx = jax.random.categorical(key, logits)
@@ -156,25 +216,32 @@ def decode(
             idx = jnp.argmax(logits)
         probs = jnp.exp(logprobs)
         ent = -jnp.sum(jnp.where(probs > 0, probs * logprobs, 0.0))
+        lp = logprobs[idx]
+        if valid is not None:
+            lp = jnp.where(live, lp, 0.0)
+            ent = jnp.where(live, ent, 0.0)
         visited = visited.at[idx].set(True)
-        return (state, emb[idx], visited), (idx, logprobs[idx], ent)
+        return (state, emb[idx], visited), (idx, lp, ent)
 
     init = (enc_state, params["dec0"], jnp.zeros(n, bool))
     _, (order, logp, ent) = jax.lax.scan(step, init, keys)
     return order.astype(jnp.int32), logp, ent
 
 
-def _run(params, feats, parent_mat, sample_key, mask_infeasible):
-    C, enc_state, emb = encode(params, feats)
+def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid):
+    C, enc_state, emb = encode(params, feats, n_valid=n_valid)
     return decode(
         params, C, emb, enc_state, parent_mat,
         sample_key=sample_key, mask_infeasible=mask_infeasible,
+        n_valid=n_valid,
     )
 
 
-def greedy_order(params, feats, parent_mat, mask_infeasible=True):
-    return _run(params, feats, parent_mat, None, mask_infeasible)
+def greedy_order(params, feats, parent_mat, mask_infeasible=True,
+                 n_valid=None):
+    return _run(params, feats, parent_mat, None, mask_infeasible, n_valid)
 
 
-def sample_order(params, feats, parent_mat, key, mask_infeasible=True):
-    return _run(params, feats, parent_mat, key, mask_infeasible)
+def sample_order(params, feats, parent_mat, key, mask_infeasible=True,
+                 n_valid=None):
+    return _run(params, feats, parent_mat, key, mask_infeasible, n_valid)

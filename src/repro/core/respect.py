@@ -10,6 +10,12 @@
   step 4  rho(pi) -> stage assignment, post-inference repair, ready for
           deployment (the Edge TPU simulator or the pod pipeline runner).
 
+``schedule_many(graphs, n_stages)`` is the serving-path batch API: graphs
+are grouped into power-of-two size buckets (:mod:`repro.core.batching`),
+each bucket decodes as one vmapped XLA program, and ``rho`` + repair run
+per graph on the host.  A content-hash LRU cache short-circuits repeated
+graphs (multi-tenant traffic re-submits the same model DAGs constantly).
+
 Checkpoints are plain ``.npz`` parameter dumps; a pretrained agent trained by
 ``examples/train_respect.py`` ships with the benchmarks.
 """
@@ -17,6 +23,7 @@ Checkpoints are plain ``.npz`` parameter dumps; a pretrained agent trained by
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from pathlib import Path
 
 import jax
@@ -24,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ptrnet
+from .batching import BucketedDecoder
 from .costmodel import PipelineSystem
 from .embedding import embed_dim, embed_graph
 from .graph import CompGraph
@@ -43,11 +51,18 @@ class ScheduleResult(dict):
 
 class RespectScheduler:
     def __init__(self, params, hidden: int | None = None,
-                 mask_infeasible: bool = True, max_deg: int = 6):
+                 mask_infeasible: bool = True, max_deg: int = 6,
+                 cache_size: int = 1024):
         self.params = params
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
         self._jitted: dict[int, callable] = {}
+        self._decoder = BucketedDecoder(
+            mask_infeasible=mask_infeasible, max_deg=max_deg)
+        self._cache: OrderedDict = OrderedDict()   # content hash -> result
+        self._cache_size = cache_size
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -117,3 +132,101 @@ class RespectScheduler:
             res["t_network_s"] = t_net
             res["t_total_s"] = t_total
         return res
+
+    # ------------------------------------------------------------------ #
+    # batch serving API
+    # ------------------------------------------------------------------ #
+    def _cache_key(self, graph: CompGraph, n_stages: int,
+                   system: PipelineSystem) -> tuple:
+        return (graph.content_hash(), n_stages, system)
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    def schedule_many(
+        self,
+        graphs: list[CompGraph],
+        n_stages: int,
+        system: PipelineSystem | None = None,
+        return_timing: bool = False,
+        use_cache: bool = True,
+    ) -> list[ScheduleResult]:
+        """Schedule a batch of graphs through the bucketed decode engine.
+
+        Results are positionally aligned with ``graphs`` and identical to
+        per-graph :meth:`schedule` output (the pad-aware decode emits the
+        same greedy order, and ``rho``/repair are the same host code).
+        Repeated graphs — by content hash, within this call or across
+        calls — are served from an LRU schedule cache.
+        """
+        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        t0 = time.perf_counter()
+        results: list[ScheduleResult | None] = [None] * len(graphs)
+        misses: list[int] = []
+        seen: dict[tuple, list[int]] = {}   # key -> positions awaiting fill
+        for i, g in enumerate(graphs):
+            key = self._cache_key(g, n_stages, system) if use_cache else None
+            if use_cache and key in self._cache:
+                self._cache.move_to_end(key)
+                cached = self._cache[key]
+                self.cache_hits += 1
+                results[i] = ScheduleResult(
+                    assignment=cached["assignment"].copy(),
+                    order=cached["order"].copy(),
+                    n_stages=n_stages,
+                    model=g.model_name,
+                    cache_hit=True,
+                )
+            elif use_cache and key in seen:
+                seen[key].append(i)         # duplicate within this batch
+            else:
+                if use_cache:
+                    seen[key] = [i]
+                misses.append(i)
+
+        t_decode = 0.0
+        if misses:
+            self.cache_misses += len(misses)
+            td = time.perf_counter()
+            orders = self._decoder.greedy_orders(
+                self.params, [graphs[i] for i in misses])
+            t_decode = time.perf_counter() - td
+            for i, order in zip(misses, orders):
+                g = graphs[i]
+                assignment = repair(
+                    g, rho(g, order, n_stages, system), n_stages)
+                results[i] = ScheduleResult(
+                    assignment=assignment,
+                    order=order,
+                    n_stages=n_stages,
+                    model=g.model_name,
+                    cache_hit=False,
+                )
+                if use_cache:
+                    key = self._cache_key(g, n_stages, system)
+                    # store copies: the returned result must not alias the
+                    # cache entry, or a caller mutating its result would
+                    # poison every later hit.
+                    self._cache[key] = {
+                        "assignment": assignment.copy(),
+                        "order": np.asarray(order).copy()}
+                    for j in seen.get(key, [])[1:]:
+                        self.cache_hits += 1
+                        results[j] = ScheduleResult(
+                            assignment=assignment.copy(),
+                            order=order.copy(),
+                            n_stages=n_stages,
+                            model=graphs[j].model_name,
+                            cache_hit=True,
+                        )
+                    while len(self._cache) > self._cache_size:
+                        self._cache.popitem(last=False)
+
+        if return_timing:
+            t_total = time.perf_counter() - t0
+            for r in results:
+                r["t_decode_batch_s"] = t_decode
+                r["t_total_batch_s"] = t_total
+        return results

@@ -18,8 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
-
+import hashlib
+from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,11 +28,12 @@ from .. import optim
 from . import ptrnet
 from .costmodel import PipelineSystem
 from .embedding import embed_graph
-from .exact import exact_bb, exact_dp, order_from_assignment
+from .exact import exact_bb, order_from_assignment
 from .graph import CompGraph
 
 __all__ = [
     "GraphBatch",
+    "label_graphs",
     "pack_graphs",
     "rho_dp_jax",
     "cosine_reward",
@@ -74,34 +75,136 @@ class GraphBatch:
         return self.feats.shape[1]
 
 
+@functools.lru_cache(maxsize=32)
+def _dp_label_fn(n: int, n_stages: int, system: PipelineSystem):
+    """Jitted vmapped exact-DP labeler for n-node graphs (identity order —
+    node indices are topological by CompGraph construction, exactly the
+    order :func:`repro.core.exact.exact_dp` segments by default)."""
+    order = jnp.arange(n, dtype=jnp.int32)
+
+    def batched(fl, pb, ob, pmat):
+        def one(fl, pb, ob, pmat):
+            assign, obj = rho_dp_jax(
+                order, fl, pb, ob, pmat, n_stages, system)
+            return assign, obj
+
+        return jax.vmap(one)(fl, pb, ob, pmat)
+
+    return jax.jit(batched)
+
+
+def _label_cache_key(g: CompGraph, n_stages: int, system: PipelineSystem,
+                     method: str, max_deg: int, bb_budget_s: float) -> str:
+    h = hashlib.sha256()
+    h.update(g.content_hash().encode())
+    # bb labels depend on the solver time budget; dp labels don't.
+    budget = bb_budget_s if method == "bb" else 0.0
+    h.update(repr((n_stages, method, max_deg, budget, system.compute_rate,
+                   system.compute_eff, system.link_bw, system.cache_bytes,
+                   system.fixed_overhead_s)).encode())
+    return h.hexdigest()[:40]
+
+
+def label_graphs(
+    graphs: list[CompGraph],
+    n_stages: int,
+    system: PipelineSystem,
+    max_deg: int = 6,
+    label_method: str = "dp",
+    bb_budget_s: float = 0.25,
+    cache_dir: str | Path | None = None,
+) -> tuple[list[np.ndarray], list[np.ndarray]]:
+    """Exact stage labels + imitation orders for a list of graphs.
+
+    ``label_method="dp"`` solves all cache-miss graphs of equal size in ONE
+    vmapped XLA program (:func:`rho_dp_jax` over the identity topological
+    order — bottleneck-optimal contiguous segmentation like
+    :func:`exact_dp`, but in f32 and without its latency tie-break, so
+    bottleneck-tied splits may resolve differently), replacing the former
+    per-graph host loop.  ``"bb"`` keeps the branch-and-bound host solver
+    for arbitrary-DAG exactness.  With ``cache_dir`` each
+    graph's label is persisted as a tiny ``.npz`` keyed by content hash,
+    so re-labeling the same graphs (e.g. deterministic ``DagSampler``
+    epochs) never re-solves.
+    """
+    system = system.with_stages(n_stages)
+    la: list[np.ndarray | None] = [None] * len(graphs)
+    cache = Path(cache_dir) if cache_dir is not None else None
+    keys: list[str | None] = [None] * len(graphs)
+    misses: list[int] = []
+    for i, g in enumerate(graphs):
+        if cache is not None:
+            keys[i] = _label_cache_key(
+                g, n_stages, system, label_method, max_deg, bb_budget_s)
+            p = cache / f"{keys[i]}.npz"
+            if p.exists():
+                with np.load(p) as d:
+                    la[i] = d["assign"].astype(np.int64)
+                continue
+        misses.append(i)
+
+    if misses:
+        if label_method == "bb":
+            for i in misses:
+                assign, _ = exact_bb(graphs[i], n_stages, system,
+                                     time_budget_s=bb_budget_s)
+                la[i] = np.asarray(assign, dtype=np.int64)
+        else:
+            by_n: dict[int, list[int]] = {}
+            for i in misses:
+                by_n.setdefault(graphs[i].n, []).append(i)
+            for n, idxs in by_n.items():
+                fl = jnp.asarray(
+                    np.stack([graphs[i].flops for i in idxs]), jnp.float32)
+                pb = jnp.asarray(
+                    np.stack([graphs[i].param_bytes for i in idxs]),
+                    jnp.float32)
+                ob = jnp.asarray(
+                    np.stack([graphs[i].out_bytes for i in idxs]),
+                    jnp.float32)
+                pmat = jnp.asarray(
+                    np.stack([graphs[i].parent_matrix(max_deg)
+                              for i in idxs]))
+                assigns, _ = _dp_label_fn(n, n_stages, system)(
+                    fl, pb, ob, pmat)
+                assigns = np.asarray(assigns, dtype=np.int64)
+                for row, i in enumerate(idxs):
+                    la[i] = assigns[row]
+        if cache is not None:
+            cache.mkdir(parents=True, exist_ok=True)
+            for i in misses:
+                np.savez(cache / f"{keys[i]}.npz", assign=la[i])
+
+    lo = [order_from_assignment(a) for a in la]
+    return la, lo
+
+
 def pack_graphs(
     graphs: list[CompGraph],
     n_stages: int,
     system: PipelineSystem,
     max_deg: int = 6,
-    label_method: str = "bb",
+    label_method: str = "dp",
     bb_budget_s: float = 0.25,
+    cache_dir: str | Path | None = None,
 ) -> GraphBatch:
-    """Embed + label a list of equally-sized graphs (host-side, numpy)."""
-    feats, pmat, fl, pb, ob, la, lo = [], [], [], [], [], [], []
-    for g in graphs:
-        feats.append(embed_graph(g, max_deg))
-        pmat.append(g.parent_matrix(max_deg))
-        fl.append(g.flops)
-        pb.append(g.param_bytes)
-        ob.append(g.out_bytes)
-        if label_method == "bb":
-            assign, _ = exact_bb(g, n_stages, system, time_budget_s=bb_budget_s)
-        else:
-            assign, _ = exact_dp(g, n_stages, system)
-        la.append(assign)
-        lo.append(order_from_assignment(assign))
+    """Embed + label a list of equally-sized graphs into one fixed-shape
+    pack.  Labeling runs through :func:`label_graphs` (vmapped exact DP by
+    default, optional on-disk cache)."""
+    la, lo = label_graphs(
+        graphs, n_stages, system, max_deg=max_deg,
+        label_method=label_method, bb_budget_s=bb_budget_s,
+        cache_dir=cache_dir)
+    feats = [embed_graph(g, max_deg) for g in graphs]
+    pmat = [g.parent_matrix(max_deg) for g in graphs]
     return GraphBatch(
         feats=jnp.asarray(np.stack(feats)),
         parent_mat=jnp.asarray(np.stack(pmat)),
-        flops=jnp.asarray(np.stack(fl), jnp.float32),
-        param_bytes=jnp.asarray(np.stack(pb), jnp.float32),
-        out_bytes=jnp.asarray(np.stack(ob), jnp.float32),
+        flops=jnp.asarray(np.stack([g.flops for g in graphs]), jnp.float32),
+        param_bytes=jnp.asarray(
+            np.stack([g.param_bytes for g in graphs]), jnp.float32),
+        out_bytes=jnp.asarray(
+            np.stack([g.out_bytes for g in graphs]), jnp.float32),
         label_assign=jnp.asarray(np.stack(la), jnp.int32),
         label_order=jnp.asarray(np.stack(lo), jnp.int32),
     )

@@ -113,18 +113,38 @@ def sample_batch(
 
 class DagSampler:
     """Stateful sampler with a deterministic stream (seed + counter), so the
-    synthetic training set is reproducible across restarts."""
+    synthetic training set is reproducible across restarts.
 
-    def __init__(self, seed: int = 0, n: int = 30, degs=(2, 3, 4, 5, 6)):
+    ``label_cache_dir`` (optional) is forwarded to the batch labeler: the
+    stream is deterministic, so a second epoch (or a restarted run) over
+    the same (seed, counter) prefix re-reads every exact label from disk
+    instead of re-solving.
+    """
+
+    def __init__(self, seed: int = 0, n: int = 30, degs=(2, 3, 4, 5, 6),
+                 label_cache_dir=None):
         self.seed = seed
         self.n = n
         self.degs = tuple(degs)
+        self.label_cache_dir = label_cache_dir
         self._count = 0
 
     def next_batch(self, batch: int) -> list[CompGraph]:
         rng = np.random.default_rng((self.seed, self._count))
         self._count += 1
         return sample_batch(rng, batch, n=self.n, degs=self.degs)
+
+    def next_packed_batch(self, batch: int, n_stages: int, system=None,
+                          max_deg: int = 6, label_method: str = "dp"):
+        """Sample + embed + exact-label one training batch (a
+        :class:`repro.core.rl.GraphBatch`), labels solved in one vmapped
+        XLA program and cached on disk when ``label_cache_dir`` is set."""
+        from .costmodel import PipelineSystem
+        from .rl import pack_graphs
+        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        return pack_graphs(
+            self.next_batch(batch), n_stages, system, max_deg=max_deg,
+            label_method=label_method, cache_dir=self.label_cache_dir)
 
     def state(self) -> dict:
         return {"seed": self.seed, "count": self._count}

@@ -16,8 +16,7 @@ import numpy as np
 
 from ..core.costmodel import PipelineSystem
 from ..core.embedding import embed_graph
-from ..core.exact import exact_bb, exact_dp, order_from_assignment
-from ..core.graph import CompGraph
+from ..core.exact import exact_bb, order_from_assignment
 from ..core.sampler import sample_batch
 
 __all__ = ["LabeledDagDataset"]
@@ -58,20 +57,28 @@ class LabeledDagDataset:
         batch = 64
         done = 0
         while done < self.count:
-            for g in sample_batch(rng, min(batch, self.count - done), n=self.n):
+            chunk = sample_batch(rng, min(batch, self.count - done), n=self.n)
+            for g in chunk:
                 feats.append(embed_graph(g, self.max_deg))
                 pmat.append(g.parent_matrix(self.max_deg))
                 fl.append(g.flops)
                 pb.append(g.param_bytes)
                 ob.append(g.out_bytes)
-                if self.label_method == "bb":
+            if self.label_method == "bb":
+                for g in chunk:
                     a, _ = exact_bb(g, self.n_stages, self.system,
                                     time_budget_s=self.bb_budget_s)
-                else:
-                    a, _ = exact_dp(g, self.n_stages, self.system)
-                la.append(a)
-                lo.append(order_from_assignment(a))
-                done += 1
+                    la.append(a)
+                    lo.append(order_from_assignment(a))
+            else:
+                # one vmapped exact-DP solve for the whole chunk
+                from ..core.rl import label_graphs
+                ca, co = label_graphs(chunk, self.n_stages, self.system,
+                                      max_deg=self.max_deg,
+                                      label_method="dp")
+                la.extend(ca)
+                lo.extend(co)
+            done += len(chunk)
             if verbose:
                 print(f"  labeled {done}/{self.count}")
         self._data = {

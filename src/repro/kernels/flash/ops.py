@@ -14,13 +14,10 @@
 
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
 from .kernel import flash_attention_pallas
-from .ref import reference_attention, reference_chunked
+from .ref import reference_attention
 from .vjp import flash_mha_vjp
 
 __all__ = ["flash_attention", "decode_attention"]
@@ -53,7 +50,11 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                                       block_q=block_q, block_k=block_k,
                                       interpret=True)
     if impl == "chunked":
-        blk = min(block_k * 4, k.shape[2])
+        # honor the requested block: inflating it (e.g. block_k*4) can
+        # collapse the kv scan to one full-width block, whose O(Sq*Sk)
+        # score tile then escapes into the top-level program — exactly the
+        # quadratic-memory shape the chunked impl exists to avoid.
+        blk = min(block_k, k.shape[2])
         return flash_mha_vjp(q, k, v, causal, scale, blk, None)
     if impl == "ref":
         return reference_attention(q, k, v, causal=causal, scale=scale)

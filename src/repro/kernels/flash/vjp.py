@@ -90,7 +90,12 @@ def _fwd_chunked(q, k, v, causal, scale, block_k, sk_valid=None):
         mask = jnp.broadcast_to(k_pos[None, :] < sk_valid, (sq, block_k))
         if causal and sq > 1:
             mask = mask & (k_pos[None, :] <= q_pos[:, None])
-        s = jnp.where(mask[None, None], s, -jnp.inf)
+        # additive bias log(mask) in {0, -inf} instead of a full-tile
+        # jnp.where: where's scalar branches broadcast to O(Sq*block)
+        # loop-invariant constants that jax hoists out of the scan into
+        # the top-level program; log of the (loop-variant) mask stays in
+        # the body.  s + 0.0 == s and s + (-inf) == -inf, bit-identical.
+        s = s + jnp.log(mask.astype(jnp.float32))[None, None]
         m_new = jnp.maximum(m, s.max(axis=-1))
         shift = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.exp(s - shift[..., None])
@@ -162,7 +167,7 @@ def _vjp_bwd(causal, scale, block_k, fwd_impl, res, dout):
         mask = k_pos[None, :] < sk
         if causal and sq > 1:
             mask = mask & (k_pos[None, :] <= q_pos[:, None])
-        s = jnp.where(mask[None, None], s, -jnp.inf)
+        s = s + jnp.log(mask.astype(jnp.float32))[None, None]  # see fwd note
         p = jnp.exp(s - lse[..., None])                          # (b,h,sq,bk)
         pb = p.astype(q.dtype)
         dv_j = jax.lax.dot_general(

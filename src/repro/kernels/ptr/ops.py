@@ -3,7 +3,6 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import pointer_step_pallas
 from .ref import reference_pointer_step

@@ -14,9 +14,6 @@ via ``parallel.sharding``; optimizer state mirrors parameter shardings
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -24,7 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .. import optim
 from ..configs.base import TrainConfig
 from ..models.model import Model
-from ..parallel.sharding import resolve_axes, sharding_for, tree_shardings
+from ..parallel.sharding import sharding_for
 
 __all__ = [
     "param_shardings", "batch_shardings", "opt_shardings", "cache_shardings",

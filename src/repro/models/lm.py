@@ -21,8 +21,6 @@ positions.  The same assembly serves decode with a unified cache pytree.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -189,11 +189,27 @@ def _entry_name(text: str) -> str | None:
     return None
 
 
+def _operand_names(instr: _Instr, symtab: dict[str, str]) -> list[str]:
+    """Operand instruction names of ``instr`` (the tokens before the first
+    close-paren that resolve in the symbol table — type tokens like
+    ``f32`` / dimension digits never do)."""
+    head = instr.rest.split("),")[0]
+    names = re.findall(r"%([\w.\-]+)", head)
+    if not names:   # HLO dumps without % sigils
+        names = [t for t in re.findall(r"([\w.\-]+)", head) if t in symtab]
+    return names
+
+
 def _dot_flops(instr: _Instr, symtab: dict[str, str]) -> float:
-    """2 * prod(out) * prod(contracting dims of lhs)."""
+    """2 * prod(out) * prod(contracting dims of lhs).
+
+    ``prod(out)`` already includes the batch dims of a ``dot_general``
+    (they appear in the output shape), so multiplying in only the lhs
+    *contracting* dims prices a batched matmul correctly — batch dims must
+    not enter the contraction factor a second time.
+    """
     out_dims = _shape_dims(instr.type_str)
-    # operand names
-    args = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    args = _operand_names(instr, symtab)
     lhs_type = symtab.get(args[0]) if args else None
     contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
     flops = 2.0
@@ -210,7 +226,7 @@ def _dot_flops(instr: _Instr, symtab: dict[str, str]) -> float:
 
 def _conv_flops(instr: _Instr, symtab: dict[str, str]) -> float:
     out_dims = _shape_dims(instr.type_str)
-    args = re.findall(r"%?([\w.\-]+)", instr.rest.split("),")[0])
+    args = _operand_names(instr, symtab)
     rhs_type = symtab.get(args[1]) if len(args) > 1 else None
     flops = 2.0
     for d in out_dims:

@@ -3,8 +3,22 @@ tests must see the single real CPU device; multi-device behaviour is tested
 via subprocess scripts (tests/test_distributed.py) that set the flag before
 importing jax."""
 
+import importlib.util
+import sys
+from pathlib import Path
+
 import numpy as np
 import pytest
+
+try:                      # real hypothesis (CI: pip install -e .[test])
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:   # offline fallback: deterministic sampling stub
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_stub", Path(__file__).parent / "_hypothesis_stub.py")
+    _stub = importlib.util.module_from_spec(_spec)
+    sys.modules["_hypothesis_stub"] = _stub
+    _spec.loader.exec_module(_stub)
+    _stub.install()
 
 
 @pytest.fixture

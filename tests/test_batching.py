@@ -1,0 +1,160 @@
+"""Batched scheduling engine: buckets, pad-aware decode, schedule_many,
+schedule cache, and the vmapped exact-DP labeler."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PipelineSystem, RespectScheduler, bucket_for, pack_padded, ptrnet,
+    sample_batch, sample_dag, validate_monotone,
+)
+from repro.core.batching import BucketedDecoder, bucketize
+from repro.core.costmodel import evaluate_schedule
+from repro.core.embedding import embed_dim, embed_graph
+from repro.core.exact import exact_dp
+from repro.core.rl import label_graphs
+
+
+# ----------------------------- buckets ------------------------------- #
+def test_bucket_for_rounds_to_power_of_two():
+    assert bucket_for(1) == 8          # floor
+    assert bucket_for(8) == 8
+    assert bucket_for(9) == 16
+    assert bucket_for(30) == 32
+    assert bucket_for(32) == 32
+    assert bucket_for(33) == 64
+    with pytest.raises(ValueError):
+        bucket_for(0)
+
+
+def test_bucketize_groups_by_bucket():
+    rng = np.random.default_rng(0)
+    graphs = [sample_dag(rng, n=n) for n in (30, 14, 30, 9, 64)]
+    buckets = bucketize(graphs)
+    assert buckets == {32: [0, 2], 16: [1, 3], 64: [4]}
+
+
+# ------------------------- pad-aware decode --------------------------- #
+def test_padded_decode_matches_unpadded():
+    """The valid prefix of a padded greedy decode equals the unpadded
+    decode, padded steps contribute zero logp/entropy."""
+    g = sample_dag(np.random.default_rng(3), n=13, deg=3)
+    params = ptrnet.init_params(jax.random.PRNGKey(0), embed_dim(), 64)
+    feats = jnp.asarray(embed_graph(g))
+    pmat = jnp.asarray(g.parent_matrix(6))
+    o1, lp1, e1 = ptrnet.greedy_order(params, feats, pmat)
+
+    pad_n = 16
+    pf = jnp.zeros((pad_n, feats.shape[1]), feats.dtype).at[: g.n].set(feats)
+    pp = jnp.full((pad_n, 6), -1, jnp.int32).at[: g.n].set(pmat)
+    o2, lp2, e2 = ptrnet.greedy_order(params, pf, pp, n_valid=g.n)
+
+    assert np.array_equal(np.asarray(o1), np.asarray(o2)[: g.n])
+    assert sorted(np.asarray(o2)[: g.n].tolist()) == list(range(g.n))
+    np.testing.assert_allclose(np.asarray(lp1), np.asarray(lp2)[: g.n],
+                               atol=1e-6)
+    assert float(jnp.abs(lp2[g.n:]).sum()) == 0.0
+    assert float(jnp.abs(e2[g.n:]).sum()) == 0.0
+
+
+def test_padded_sampled_decode_is_topological_permutation():
+    g = sample_dag(np.random.default_rng(7), n=11, deg=3)
+    params = ptrnet.init_params(jax.random.PRNGKey(1), embed_dim(), 32)
+    pad_n = 16
+    feats = embed_graph(g)
+    pf = jnp.zeros((pad_n, feats.shape[1]), jnp.float32).at[: g.n].set(feats)
+    pp = jnp.full((pad_n, 6), -1, jnp.int32).at[: g.n].set(
+        jnp.asarray(g.parent_matrix(6)))
+    order, _, _ = ptrnet.sample_order(
+        params, pf, pp, jax.random.PRNGKey(2), n_valid=g.n)
+    prefix = np.asarray(order)[: g.n]
+    assert sorted(prefix.tolist()) == list(range(g.n))
+    pos = np.empty(g.n, np.int64)
+    pos[prefix] = np.arange(g.n)
+    for u, v in g.edges():
+        assert pos[u] < pos[v]
+
+
+def test_bucketed_decoder_mixed_sizes_and_lru():
+    rng = np.random.default_rng(1)
+    graphs = [sample_dag(rng, n=n) for n in (30, 12, 25, 7, 30)]
+    params = ptrnet.init_params(jax.random.PRNGKey(0), embed_dim(), 32)
+    dec = BucketedDecoder(max_compiled=2)
+    orders = dec.greedy_orders(params, graphs)
+    for g, o in zip(graphs, orders):
+        assert sorted(o.tolist()) == list(range(g.n))
+    assert len(dec.compiled_shapes) <= 2      # LRU bound respected
+
+
+# ----------------------------- serving API ---------------------------- #
+@pytest.fixture(scope="module")
+def sched():
+    return RespectScheduler.init(seed=0, hidden=32)
+
+
+def test_schedule_many_matches_schedule(sched):
+    graphs = sample_batch(np.random.default_rng(5), 6, n=30)
+    graphs += [sample_dag(np.random.default_rng(6), n=18, deg=3)]
+    results = sched.schedule_many(graphs, 4, use_cache=False)
+    for g, r in zip(graphs, results):
+        single = sched.schedule(g, 4)
+        assert np.array_equal(single.assignment, r.assignment), g.model_name
+        assert validate_monotone(g, r.assignment, 4)
+
+
+def test_schedule_many_cache_and_in_batch_dedup(sched):
+    g = sample_dag(np.random.default_rng(9), n=30, deg=3)
+    sched.clear_cache()
+    results = sched.schedule_many([g, g, g], 4)
+    assert sched.cache_misses == 1            # dedup inside one call
+    assert not results[0]["cache_hit"] and results[1]["cache_hit"]
+    assert np.array_equal(results[0].assignment, results[2].assignment)
+    again = sched.schedule_many([g], 4)       # cross-call cache hit
+    assert again[0]["cache_hit"]
+    assert np.array_equal(again[0].assignment, results[0].assignment)
+    assert sched.cache_hits == 3
+
+
+def test_schedule_cache_distinguishes_stages_and_system(sched):
+    g = sample_dag(np.random.default_rng(10), n=30, deg=2)
+    sched.clear_cache()
+    r4 = sched.schedule_many([g], 4)[0]
+    r5 = sched.schedule_many([g], 5)[0]
+    assert not r5["cache_hit"]
+    assert r4["n_stages"] == 4 and r5["n_stages"] == 5
+
+
+# ------------------------- vmapped DP labeler -------------------------- #
+def test_label_graphs_dp_matches_exact_dp_objective():
+    sys4 = PipelineSystem(n_stages=4)
+    graphs = sample_batch(np.random.default_rng(2), 8, n=30)
+    la, lo = label_graphs(graphs, 4, sys4, label_method="dp")
+    for g, a, o in zip(graphs, la, lo):
+        assert validate_monotone(g, a, 4)
+        _, obj = exact_dp(g, 4, sys4)
+        ev = evaluate_schedule(g, a, sys4)
+        assert ev.bottleneck_s == pytest.approx(obj, rel=1e-4)
+        assert sorted(o.tolist()) == list(range(g.n))
+
+
+def test_label_graphs_disk_cache_roundtrip(tmp_path):
+    sys4 = PipelineSystem(n_stages=4)
+    graphs = sample_batch(np.random.default_rng(4), 5, n=20)
+    la1, _ = label_graphs(graphs, 4, sys4, cache_dir=tmp_path)
+    assert len(list(tmp_path.glob("*.npz"))) == 5
+    la2, _ = label_graphs(graphs, 4, sys4, cache_dir=tmp_path)
+    for a, b in zip(la1, la2):
+        assert np.array_equal(a, b)
+
+
+def test_pack_padded_shapes():
+    graphs = [sample_dag(np.random.default_rng(11), n=n) for n in (30, 9)]
+    batch = pack_padded(graphs)
+    assert batch.bucket_n == 32
+    assert batch.batch == 2
+    assert batch.feats.shape == (2, 32, embed_dim())
+    assert np.asarray(batch.n_valid).tolist() == [30, 9]
+    # padded parent rows stay -1
+    assert int(batch.parent_mat[1, 9:].max()) == -1

@@ -10,6 +10,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow    # each case compiles in a subprocess (>1 min)
+
 REPO = Path(__file__).resolve().parent.parent
 
 

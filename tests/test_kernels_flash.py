@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels.flash.kernel import flash_attention_pallas
 from repro.kernels.flash.ops import decode_attention, flash_attention
-from repro.kernels.flash.ref import reference_attention, reference_chunked
+from repro.kernels.flash.ref import reference_attention
 
 SHAPES = [
     # (b, hq, hkv, sq, sk, d, dv, causal, dtype, tol)

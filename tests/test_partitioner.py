@@ -1,10 +1,9 @@
 """Pod-scale partitioner: model graphs, stage assignments, MoE skew."""
 
-import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config
-from repro.core import PodSystem, validate_monotone
+from repro.core import validate_monotone
 from repro.core.partitioner import (model_graph, partition_model,
                                     stage_assignment_to_layers)
 

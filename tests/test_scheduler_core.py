@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    CompGraph, EDGETPU, PipelineSystem, brute_force_monotone,
+    CompGraph, PipelineSystem, brute_force_monotone,
     compiler_partition, evaluate_schedule, exact_bb, exact_dp, list_schedule,
     repair, rho, sample_dag, validate_monotone,
 )

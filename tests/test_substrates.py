@@ -1,8 +1,5 @@
 """Data pipeline, optimizer, checkpoint, runtime fault-tolerance."""
 
-import threading
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -17,6 +17,8 @@ from repro.core import (EDGETPU, MODEL_SPECS, PipelineSystem,
                         sample_batch, validate_monotone)
 from repro.core.rl import RLTrainer, pack_graphs
 
+pytestmark = pytest.mark.slow    # full train->deploy loops (>1 min)
+
 
 def test_table1_statistics_exact():
     for name, (v, deg, depth, *_rest) in MODEL_SPECS.items():
