@@ -1,18 +1,26 @@
-"""Batched scheduling engine throughput: ``schedule_many`` vs a loop of
-``schedule``.
+"""Batched scheduling engine throughput: fused device pipeline vs the host
+loop, plus the decode / post-processing split the fusion removes.
 
-Two serving scenarios on CPU, both verified to produce *identical*
-assignments through either API:
+Scenarios on CPU, all verified to produce *identical* assignments:
 
 * **distinct** — 64 unique synthetic |V|=30 DAGs (every request is a new
-  graph): measures the bucketed vmapped decode against 64 single-graph
-  dispatches.  Decode compute is identical, so the win is dispatch
-  amortization + GEMV->GEMM efficiency (~2-3x on a 2-core CPU box).
+  graph): a loop of single-graph ``schedule`` calls vs one fused
+  ``schedule_many`` (greedy decode -> segmentation DP -> repair as ONE
+  vmapped XLA program per size bucket).
+* **split** — the same cold batch through the PR-1-style two-phase
+  pipeline: batched decode (``BucketedDecoder.greedy_orders``), then host
+  ``rho`` + ``repair`` per graph.  Reported as decode vs post time so the
+  fused speedup is attributable.
 * **traffic** — 64 requests drawn from a pool of 8 distinct DAGs (the
   paper's deployment reality: a fixed zoo of DNNs re-scheduled
   constantly): ``schedule_many`` dedups by content hash inside the call
-  and serves repeats from the schedule cache, while the single-graph API
-  must re-solve every request.
+  and serves repeats from the schedule cache, while the baseline loop
+  (``use_cache=False``) must re-solve every request.
+
+Writes two artifacts: ``BENCH_smoke.json`` keeps PR 1's schema (the CI
+regression guard diffs ``speedup_traffic`` against the checked-in copy);
+``BENCH_serve.json`` adds the decode/post split and the fused-vs-host
+comparison.
 
 The agent uses hidden=128, the container-scale deployment config of
 ``examples/train_respect.py``.
@@ -26,12 +34,21 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import RespectScheduler, sample_batch
+from repro.core import RespectScheduler, repair, rho, sample_batch
 
 from .common import emit
 
 N_STAGES = 4
 HIDDEN = 128
+
+# keys that make up the stable BENCH_smoke.json schema (PR 1 contract)
+SMOKE_KEYS = [
+    "batch", "pool_size", "hidden", "n_stages",
+    "graphs_per_sec_single", "graphs_per_sec_batched_cold",
+    "graphs_per_sec_traffic_single", "graphs_per_sec_traffic_batched",
+    "speedup_cold", "speedup_traffic",
+    "match_exact_distinct", "match_exact_traffic",
+]
 
 
 def _best_time(fn, repeat: int) -> float:
@@ -43,7 +60,8 @@ def _best_time(fn, repeat: int) -> float:
     return best
 
 
-def run(smoke: bool = False, out_json: str | Path | None = None):
+def run(smoke: bool = False, out_json: str | Path | None = None,
+        out_serve_json: str | Path | None = None):
     batch = 16 if smoke else 64
     pool_size = 4 if smoke else 8
     repeat = 2 if smoke else 3
@@ -52,31 +70,52 @@ def run(smoke: bool = False, out_json: str | Path | None = None):
     trace = [graphs[i % pool_size] for i in range(batch)]
 
     # warm up compile caches for every shape both paths will touch
-    sched.schedule(graphs[0], N_STAGES)
+    sched.schedule(graphs[0], N_STAGES, use_cache=False)
     sched.schedule_many(graphs, N_STAGES, use_cache=False)
+    sched._decoder.greedy_orders(sched.params, graphs)
 
-    # --- distinct graphs ------------------------------------------------ #
+    # --- distinct graphs: single loop vs fused schedule_many ------------ #
     t_single = _best_time(
-        lambda: [sched.schedule(g, N_STAGES) for g in graphs], repeat)
+        lambda: [sched.schedule(g, N_STAGES, use_cache=False)
+                 for g in graphs], repeat)
     t_cold = _best_time(
         lambda: sched.schedule_many(graphs, N_STAGES, use_cache=False),
         repeat)
-    res_single = [sched.schedule(g, N_STAGES) for g in graphs]
+    res_single = [sched.schedule(g, N_STAGES, use_cache=False)
+                  for g in graphs]
     res_batch = sched.schedule_many(graphs, N_STAGES, use_cache=False)
     match_distinct = all(
         np.array_equal(a.assignment, b.assignment)
         for a, b in zip(res_single, res_batch))
 
-    # --- repeated-traffic trace ---------------------------------------- #
+    # --- split: batched decode + HOST rho/repair (the PR 1 miss path) --- #
+    t_decode = _best_time(
+        lambda: sched._decoder.greedy_orders(sched.params, graphs), repeat)
+    orders = sched._decoder.greedy_orders(sched.params, graphs)
+
+    def host_post():
+        return [repair(g, rho(g, o, N_STAGES), N_STAGES)
+                for g, o in zip(graphs, orders)]
+
+    t_post = _best_time(host_post, repeat)
+    host_assigns = host_post()
+    match_fused_vs_host = all(
+        np.array_equal(a, b.assignment)
+        for a, b in zip(host_assigns, res_batch))
+    t_two_phase = t_decode + t_post
+
+    # --- repeated-traffic trace ----------------------------------------- #
     t_trace_single = _best_time(
-        lambda: [sched.schedule(g, N_STAGES) for g in trace], repeat)
+        lambda: [sched.schedule(g, N_STAGES, use_cache=False)
+                 for g in trace], repeat)
 
     def trace_batched():
         sched.clear_cache()
         return sched.schedule_many(trace, N_STAGES)
 
     t_trace_batched = _best_time(trace_batched, repeat)
-    res_trace_single = [sched.schedule(g, N_STAGES) for g in trace]
+    res_trace_single = [sched.schedule(g, N_STAGES, use_cache=False)
+                        for g in trace]
     res_trace_batch = trace_batched()
     match_trace = all(
         np.array_equal(a.assignment, b.assignment)
@@ -88,13 +127,20 @@ def run(smoke: bool = False, out_json: str | Path | None = None):
     gps_traffic = batch / t_trace_batched
     speedup_cold = t_single / t_cold
     speedup_traffic = t_trace_single / t_trace_batched
+    post_frac = t_post / t_two_phase
 
     lines = [
         emit("batched/distinct/single_loop", t_single / batch * 1e6,
              f"graphs_per_sec={gps_single:.1f}"),
-        emit("batched/distinct/schedule_many", t_cold / batch * 1e6,
+        emit("batched/distinct/schedule_many_fused", t_cold / batch * 1e6,
              f"graphs_per_sec={gps_cold:.1f};speedup={speedup_cold:.2f}x;"
              f"match_exact={match_distinct}"),
+        emit("batched/split/decode_only", t_decode / batch * 1e6,
+             f"graphs_per_sec={batch / t_decode:.1f}"),
+        emit("batched/split/host_rho_repair", t_post / batch * 1e6,
+             f"post_fraction={post_frac:.2f};"
+             f"fused_speedup_vs_two_phase={t_two_phase / t_cold:.2f}x;"
+             f"match_fused_vs_host={match_fused_vs_host}"),
         emit("batched/traffic/single_loop", t_trace_single / batch * 1e6,
              f"graphs_per_sec={gps_traffic_single:.1f};pool={pool_size}"),
         emit("batched/traffic/schedule_many", t_trace_batched / batch * 1e6,
@@ -115,8 +161,20 @@ def run(smoke: bool = False, out_json: str | Path | None = None):
         "speedup_traffic": speedup_traffic,
         "match_exact_distinct": bool(match_distinct),
         "match_exact_traffic": bool(match_trace),
+        # serve-split extras (BENCH_serve.json only)
+        "t_decode_batch_s": t_decode,
+        "t_post_host_s": t_post,
+        "t_fused_batch_s": t_cold,
+        "post_fraction_host": post_frac,
+        "graphs_per_sec_two_phase": batch / t_two_phase,
+        "speedup_fused_vs_two_phase": t_two_phase / t_cold,
+        "match_fused_vs_host_pipeline": bool(match_fused_vs_host),
     }
     if out_json is not None:
-        Path(out_json).write_text(json.dumps(summary, indent=2))
+        smoke_summary = {k: summary[k] for k in SMOKE_KEYS}
+        Path(out_json).write_text(json.dumps(smoke_summary, indent=2))
         print(f"# wrote {out_json}")
+    if out_serve_json is not None:
+        Path(out_serve_json).write_text(json.dumps(summary, indent=2))
+        print(f"# wrote {out_serve_json}")
     return summary

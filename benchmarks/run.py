@@ -24,8 +24,15 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced batched-engine bench; writes the per-PR "
                          "perf-trajectory artifact (see --out-json)")
-    ap.add_argument("--out-json", default="BENCH_smoke.json",
-                    help="summary artifact path for --smoke")
+    ap.add_argument("--out-json", default=None,
+                    help="summary artifact path (--smoke default: "
+                         "BENCH_smoke.json).  Full runs use a different "
+                         "config (batch 64), so they never overwrite the "
+                         "checked-in smoke baselines unless pointed at them "
+                         "explicitly.")
+    ap.add_argument("--out-serve-json", default=None,
+                    help="serving-split artifact path (decode vs rho+repair "
+                         "vs fused; --smoke default: BENCH_serve.json)")
     args = ap.parse_args()
 
     from . import (batched_schedule_bench, fig3_solving_time,
@@ -42,7 +49,9 @@ def main() -> int:
     print("name,us_per_call,derived")
     t0 = time.time()
     if args.smoke:
-        batched_schedule_bench.run(smoke=True, out_json=args.out_json)
+        batched_schedule_bench.run(
+            smoke=True, out_json=args.out_json or "BENCH_smoke.json",
+            out_serve_json=args.out_serve_json or "BENCH_serve.json")
     else:
         want = args.only.split(",") if args.only else BENCHES
         unknown = [n for n in want if n not in mods]
@@ -51,7 +60,8 @@ def main() -> int:
                      f"choose from: {','.join(BENCHES)}")
         for name in want:
             if name == "batched":
-                mods[name].run(out_json=args.out_json)
+                mods[name].run(out_json=args.out_json,
+                               out_serve_json=args.out_serve_json)
             else:
                 mods[name].run()
     print(f"# total {time.time()-t0:.1f}s")

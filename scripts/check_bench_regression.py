@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Perf-regression guard: compare a fresh bench-smoke summary against the
+checked-in baseline and fail when a tracked metric falls below its floor.
+
+    python scripts/check_bench_regression.py FRESH.json BASELINE.json \
+        [--metric speedup_traffic] [--min-ratio 0.5]
+
+The floor is relative (``baseline * min-ratio``), not absolute: the
+checked-in ``BENCH_smoke.json`` was recorded on the dev box while CI runs
+on shared runners, but *speedup ratios* (batched vs single-loop on the
+same machine) transfer.  The default 0.5 ratio tolerates runner noise
+while still catching a serving-path fusion or cache regression, which
+shows up as a multiple, not a percentage.  Exit code 1 on regression, so
+the nightly CI step fails loudly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="summary json from this run")
+    ap.add_argument("baseline", help="checked-in baseline json")
+    ap.add_argument("--metric", action="append", default=None,
+                    help="metric(s) to guard (repeatable); default: "
+                         "speedup_traffic")
+    ap.add_argument("--min-ratio", type=float, default=0.5,
+                    help="fail when fresh < baseline * min-ratio")
+    ap.add_argument("--serve-fresh", default=None,
+                    help="fresh BENCH_serve-schema json; guards the "
+                         "host-reference exactness flag "
+                         "(match_fused_vs_host_pipeline), which the smoke "
+                         "schema does not carry")
+    args = ap.parse_args()
+    metrics = args.metric or ["speedup_traffic"]
+
+    fresh = json.loads(Path(args.fresh).read_text())
+    base = json.loads(Path(args.baseline).read_text())
+
+    failed = False
+    for m in metrics:
+        if m not in base:
+            print(f"[guard] SKIP {m}: not in baseline")
+            continue
+        if m not in fresh:
+            print(f"[guard] FAIL {m}: missing from fresh summary")
+            failed = True
+            continue
+        floor = base[m] * args.min_ratio
+        status = "FAIL" if fresh[m] < floor else "ok"
+        failed |= fresh[m] < floor
+        print(f"[guard] {status:4s} {m}: fresh={fresh[m]:.3f} "
+              f"baseline={base[m]:.3f} floor={floor:.3f}")
+    # exact-match flags are hard invariants, not ratios.  The smoke flags
+    # compare the two serving APIs (batch-of-1 vs batch-of-N programs);
+    # the serve summary carries the one vs the HOST reference pipeline.
+    checks = {args.fresh: ("match_exact_distinct", "match_exact_traffic")}
+    if args.serve_fresh:
+        checks[args.serve_fresh] = ("match_fused_vs_host_pipeline",)
+    for path, flags in checks.items():
+        data = json.loads(Path(path).read_text())
+        for m in flags:
+            if data.get(m) is False:
+                print(f"[guard] FAIL {m}: fused output diverged "
+                      f"from reference ({path})")
+                failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,8 @@ Layers (bottom-up):
 * sampler/embedding — synthetic training distribution + paper's embedding;
 * exact/heuristic/rho/postprocess — the solver zoo (imitation targets and
   baselines) and the deployment mapping;
+* segment — the jittable rho + repair twins the fused serving path and the
+  RL reward share;
 * ptrnet/rl — the LSTM pointer network and its REINFORCE trainer;
 * respect — the deployable scheduler facade;
 * dnn_graphs — Table-I real-model graphs;
@@ -24,3 +26,4 @@ from .postprocess import repair  # noqa: F401
 from .respect import RespectScheduler  # noqa: F401
 from .rho import rho  # noqa: F401
 from .sampler import DagSampler, sample_batch, sample_dag  # noqa: F401
+from .segment import repair_jax, rho_dp_jax  # noqa: F401

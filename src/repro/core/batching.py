@@ -1,20 +1,29 @@
-"""Batched decode engine: size buckets, padded packs, jitted bucket fns.
+"""Batched scheduling engine: size buckets, padded packs, fused bucket fns.
 
 The PtrNet decode is a sequential scan, so scheduling one graph per call
-leaves the accelerator idle between tiny dispatches.  This module turns a
-heterogeneous list of :class:`CompGraph` into a handful of fixed-shape
-XLA programs:
+leaves the accelerator idle between tiny dispatches — and PR 1's batched
+decode still returned to the host for the O(n^2 k) ``rho`` DP and the
+fixed-point ``repair`` per graph.  This module turns a heterogeneous list
+of :class:`CompGraph` into a handful of fixed-shape XLA programs that run
+the WHOLE miss pipeline on device:
 
 * **size bucketing** — a graph with ``n`` nodes is padded up to the next
   power-of-two bucket (``bucket_for``), so arbitrary request mixes compile
-  at most ``log2(n_max)`` decode programs instead of one per distinct size;
-* **padded packing** — :func:`pack_padded` stacks embeddings + parent
-  matrices into a :class:`PaddedGraphBatch` carrying ``n_valid`` per graph;
-  :mod:`repro.core.ptrnet`'s pad-aware masking guarantees padded slots are
-  never pointed at and the valid prefix matches the unpadded decode;
-* **LRU of compiled fns** — :class:`BucketedDecoder` keeps the jitted
-  vmapped decode for the most recent (bucket, batch-bucket) shapes and
-  evicts cold shapes, bounding compile-cache growth under shifting traffic.
+  at most ``log2(n_max)`` programs instead of one per distinct size;
+* **padded packing** — :func:`pack_padded` stacks embeddings, parent/child
+  matrices and the three cost attributes into a :class:`PaddedGraphBatch`
+  carrying ``n_valid`` per graph; the pad-aware decode
+  (:mod:`repro.core.ptrnet`) and the ``n_valid``-aware segmentation DP
+  (:mod:`repro.core.segment`) guarantee the valid prefix matches the
+  unpadded pipeline bit-for-bit;
+* **fused decode->rho->repair** — :meth:`BucketedDecoder.fused_schedules`
+  runs greedy decode, the contiguous-segmentation DP and the deployment
+  repair as ONE jitted vmapped program per bucket; the host only packs
+  inputs and slices outputs.  On TPU the decode steps hit the Pallas
+  pointer kernel (:mod:`repro.kernels.ptr`) via ``logits_builder``;
+* **LRU of compiled fns** — compiled programs are keyed by
+  (bucket_n, batch bucket, child width, stages, system) and cold shapes
+  are evicted, bounding compile-cache growth under shifting traffic.
 
 The batch dimension is bucketed to powers of two as well (short batches are
 padded with ``n_valid = 0`` rows), so a serving loop with fluctuating batch
@@ -30,7 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ptrnet
+from . import ptrnet, segment
+from .costmodel import PipelineSystem
 from .embedding import embed_graph
 from .graph import CompGraph
 
@@ -43,6 +53,7 @@ __all__ = [
 ]
 
 MIN_BUCKET = 8
+MIN_CHILD_WIDTH = 4
 
 
 def bucket_for(n: int, min_bucket: int = MIN_BUCKET) -> int:
@@ -65,14 +76,27 @@ def bucketize(
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PaddedGraphBatch:
-    """Fixed-shape pack of B graphs padded to a common node count."""
+    """Fixed-shape pack of B graphs padded to a common node count.
 
-    feats: jnp.ndarray       # (B, bucket_n, F) embedding rows, zero padded
-    parent_mat: jnp.ndarray  # (B, bucket_n, D) int32, -1 padded
-    n_valid: jnp.ndarray     # (B,) int32 real node count per graph
+    Carries everything the fused decode->rho->repair program consumes:
+    embeddings and parent matrices for the decode, the three cost
+    attributes for the segmentation DP, and the packed child matrix for
+    the co-consumer repair rule.
+    """
+
+    feats: jnp.ndarray        # (B, bucket_n, F) embedding rows, zero padded
+    parent_mat: jnp.ndarray   # (B, bucket_n, D) int32, -1 padded
+    child_mat: jnp.ndarray    # (B, bucket_n, MC) int32, -1 padded
+    ancestor_mat: jnp.ndarray # (B, bucket_n, bucket_n) bool, False padded
+    flops: jnp.ndarray        # (B, bucket_n) float32, zero padded
+    param_bytes: jnp.ndarray  # (B, bucket_n) float32, zero padded
+    out_bytes: jnp.ndarray    # (B, bucket_n) float32, zero padded
+    n_valid: jnp.ndarray      # (B,) int32 real node count per graph
 
     def tree_flatten(self):
-        return (self.feats, self.parent_mat, self.n_valid), None
+        return (self.feats, self.parent_mat, self.child_mat,
+                self.ancestor_mat, self.flops, self.param_bytes,
+                self.out_bytes, self.n_valid), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -86,14 +110,56 @@ class PaddedGraphBatch:
     def bucket_n(self) -> int:
         return self.feats.shape[1]
 
+    @property
+    def child_width(self) -> int:
+        return self.child_mat.shape[2]
+
+    def pad_batch(self, bucket_b: int) -> "PaddedGraphBatch":
+        """Pad the batch dimension with inert ``n_valid = 0`` rows."""
+        pad = bucket_b - self.batch
+        if pad < 0:
+            raise ValueError(f"batch {self.batch} exceeds bucket {bucket_b}")
+        if pad == 0:
+            return self
+        zrow = lambda a: jnp.zeros((pad,) + a.shape[1:], a.dtype)
+        neg = lambda a: jnp.full((pad,) + a.shape[1:], -1, a.dtype)
+        return PaddedGraphBatch(
+            feats=jnp.concatenate([self.feats, zrow(self.feats)]),
+            parent_mat=jnp.concatenate([self.parent_mat,
+                                        neg(self.parent_mat)]),
+            child_mat=jnp.concatenate([self.child_mat, neg(self.child_mat)]),
+            ancestor_mat=jnp.concatenate([self.ancestor_mat,
+                                          zrow(self.ancestor_mat)]),
+            flops=jnp.concatenate([self.flops, zrow(self.flops)]),
+            param_bytes=jnp.concatenate([self.param_bytes,
+                                         zrow(self.param_bytes)]),
+            out_bytes=jnp.concatenate([self.out_bytes, zrow(self.out_bytes)]),
+            n_valid=jnp.concatenate([self.n_valid, zrow(self.n_valid)]),
+        )
+
+
+def _child_width_for(graphs: list[CompGraph],
+                     min_width: int = MIN_CHILD_WIDTH) -> int:
+    """Power-of-two child-matrix width covering every graph's out-degree
+    (with a floor, so batches with different fan-outs share programs)."""
+    mc = max((g.max_out_degree for g in graphs), default=1)
+    return max(min_width, 1 << (max(mc, 1) - 1).bit_length())
+
 
 def pack_padded(
     graphs: list[CompGraph],
     bucket_n: int | None = None,
     max_deg: int = 6,
     min_bucket: int = MIN_BUCKET,
+    child_width: int | None = None,
+    decode_only: bool = False,
 ) -> PaddedGraphBatch:
-    """Embed + pad a list of graphs to a common ``bucket_n`` node count."""
+    """Embed + pad a list of graphs to a common ``bucket_n`` node count.
+
+    ``decode_only`` skips the repair-side structures — the O(n^2) ancestor
+    closure and the child matrix become zero-width placeholders — for
+    callers that only run the decode (``greedy_orders``); the fused
+    schedule path packs everything."""
     if not graphs:
         raise ValueError("empty graph list")
     n_max = max(g.n for g in graphs)
@@ -101,22 +167,39 @@ def pack_padded(
         bucket_n = bucket_for(n_max, min_bucket)
     if n_max > bucket_n:
         raise ValueError(f"graph with {n_max} nodes exceeds bucket {bucket_n}")
+    if child_width is None:
+        child_width = 0 if decode_only else _child_width_for(graphs)
     B = len(graphs)
-    feat_w = None
     feats = None
     pmat = np.full((B, bucket_n, max_deg), -1, dtype=np.int32)
+    cmat = np.full((B, bucket_n, child_width), -1, dtype=np.int32)
+    anc_n = 0 if decode_only else bucket_n
+    amat = np.zeros((B, anc_n, anc_n), dtype=bool)
+    flops = np.zeros((B, bucket_n), dtype=np.float32)
+    param_bytes = np.zeros((B, bucket_n), dtype=np.float32)
+    out_bytes = np.zeros((B, bucket_n), dtype=np.float32)
     n_valid = np.zeros(B, dtype=np.int32)
     for i, g in enumerate(graphs):
         f = embed_graph(g, max_deg)
         if feats is None:
-            feat_w = f.shape[1]
-            feats = np.zeros((B, bucket_n, feat_w), dtype=np.float32)
+            feats = np.zeros((B, bucket_n, f.shape[1]), dtype=np.float32)
         feats[i, : g.n] = f
         pmat[i, : g.n] = g.parent_matrix(max_deg)
+        if not decode_only:
+            cmat[i, : g.n] = g.child_matrix(child_width)
+            amat[i, : g.n, : g.n] = g.ancestor_matrix()
+        flops[i, : g.n] = g.flops
+        param_bytes[i, : g.n] = g.param_bytes
+        out_bytes[i, : g.n] = g.out_bytes
         n_valid[i] = g.n
     return PaddedGraphBatch(
         feats=jnp.asarray(feats),
         parent_mat=jnp.asarray(pmat),
+        child_mat=jnp.asarray(cmat),
+        ancestor_mat=jnp.asarray(amat),
+        flops=jnp.asarray(flops),
+        param_bytes=jnp.asarray(param_bytes),
+        out_bytes=jnp.asarray(out_bytes),
         n_valid=jnp.asarray(n_valid),
     )
 
@@ -148,31 +231,46 @@ class _LRU:
 
 
 class BucketedDecoder:
-    """Greedy-decode many graphs through shape-bucketed jitted programs.
+    """Run many graphs through shape-bucketed jitted programs.
 
-    One instance owns the LRU of compiled per-(bucket_n, bucket_b) decode
-    fns; `RespectScheduler` holds one for its lifetime so repeated
-    `schedule_many` calls hit warm programs.
+    One instance owns the LRU of compiled per-shape programs;
+    `RespectScheduler` holds one for its lifetime so repeated
+    `schedule_many` calls hit warm programs.  ``logits_impl`` selects the
+    pointer/glimpse op for decode steps: None auto-picks the Pallas kernel
+    on TPU and the hoisted pure-jnp path elsewhere; "ref"/"interpret"/
+    "pallas" force a :mod:`repro.kernels.ptr` implementation.
     """
 
     def __init__(self, mask_infeasible: bool = True, max_deg: int = 6,
-                 min_bucket: int = MIN_BUCKET, max_compiled: int = 16):
+                 min_bucket: int = MIN_BUCKET, max_compiled: int = 16,
+                 logits_impl: str | None = None):
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
         self.min_bucket = min_bucket
+        self.logits_impl = logits_impl
         self._fns = _LRU(max_compiled)
 
     # ------------------------------------------------------------------ #
+    def _logits_builder(self):
+        impl = self.logits_impl
+        if impl is None and jax.default_backend() == "tpu":
+            impl = "pallas"
+        if impl is None:
+            return None
+        from ..kernels.ptr import ops as ptr_ops
+        return lambda params, C: ptr_ops.make_logits_fn(params, C, impl=impl)
+
     def _decode_fn(self, bucket_n: int, bucket_b: int):
-        key = (bucket_n, bucket_b)
+        key = ("decode", bucket_n, bucket_b)
         fn = self._fns.get(key)
         if fn is None:
             mask_infeasible = self.mask_infeasible
+            builder = self._logits_builder()
 
             def batched(params, feats, pmat, n_valid):
                 def one(f, p, nv):
                     order, _, _ = ptrnet.greedy_order(
-                        params, f, p, mask_infeasible, nv)
+                        params, f, p, mask_infeasible, nv, builder)
                     return order
 
                 return jax.vmap(one)(feats, pmat, n_valid)
@@ -181,36 +279,88 @@ class BucketedDecoder:
             self._fns.put(key, fn)
         return fn
 
+    def _fused_fn(self, bucket_n: int, bucket_b: int, child_width: int,
+                  n_stages: int, system: PipelineSystem):
+        key = ("fused", bucket_n, bucket_b, child_width, n_stages, system)
+        fn = self._fns.get(key)
+        if fn is None:
+            mask_infeasible = self.mask_infeasible
+            builder = self._logits_builder()
+
+            def batched(params, batch: PaddedGraphBatch):
+                def one(f, p, c, a, fl, pb, ob, nv):
+                    order, _, _ = ptrnet.greedy_order(
+                        params, f, p, mask_infeasible, nv, builder)
+                    assign, _ = segment.rho_dp_jax(
+                        order, fl, pb, ob, p, n_stages, system, n_valid=nv)
+                    assign = segment.repair_jax(p, c, a, assign, n_stages)
+                    return order, assign
+
+                return jax.vmap(one)(
+                    batch.feats, batch.parent_mat, batch.child_mat,
+                    batch.ancestor_mat, batch.flops, batch.param_bytes,
+                    batch.out_bytes, batch.n_valid)
+
+            fn = jax.jit(batched)
+            self._fns.put(key, fn)
+        return fn
+
     @property
-    def compiled_shapes(self) -> list[tuple[int, int]]:
-        return list(self._fns._d.keys())
+    def compiled_shapes(self) -> list[tuple]:
+        return [k[1:] for k in self._fns._d.keys()]
 
     # ------------------------------------------------------------------ #
-    def greedy_orders(self, params, graphs: list[CompGraph]) -> list[np.ndarray]:
-        """Decode every graph; returns per-graph orders (length ``g.n``)."""
-        orders: list[np.ndarray | None] = [None] * len(graphs)
+    def _packed_buckets(self, graphs: list[CompGraph],
+                        decode_only: bool = False):
+        """Yield (bucket_n, idxs, batch) with both dims padded to buckets."""
         for bucket_n, idxs in bucketize(graphs, self.min_bucket).items():
             batch = pack_padded(
-                [graphs[i] for i in idxs], bucket_n, self.max_deg)
-            b = batch.batch
-            bucket_b = 1 << (b - 1).bit_length()
-            if bucket_b > b:  # pad the batch dim with n_valid = 0 rows
-                pad = bucket_b - b
-                batch = PaddedGraphBatch(
-                    feats=jnp.concatenate(
-                        [batch.feats,
-                         jnp.zeros((pad,) + batch.feats.shape[1:],
-                                   batch.feats.dtype)]),
-                    parent_mat=jnp.concatenate(
-                        [batch.parent_mat,
-                         jnp.full((pad,) + batch.parent_mat.shape[1:], -1,
-                                  batch.parent_mat.dtype)]),
-                    n_valid=jnp.concatenate(
-                        [batch.n_valid, jnp.zeros(pad, batch.n_valid.dtype)]),
-                )
-            out = self._decode_fn(bucket_n, bucket_b)(
+                [graphs[i] for i in idxs], bucket_n, self.max_deg,
+                decode_only=decode_only)
+            bucket_b = 1 << (batch.batch - 1).bit_length()
+            yield bucket_n, idxs, batch.pad_batch(bucket_b)
+
+    def greedy_orders(self, params, graphs: list[CompGraph]) -> list[np.ndarray]:
+        """Decode every graph; returns per-graph orders (length ``g.n``).
+
+        Decode-only path — kept for callers that want raw orders (training
+        eval, benchmarks measuring the decode/post split); serving uses
+        :meth:`fused_schedules`.
+        """
+        orders: list[np.ndarray | None] = [None] * len(graphs)
+        for _, idxs, batch in self._packed_buckets(graphs, decode_only=True):
+            out = self._decode_fn(batch.bucket_n, batch.batch)(
                 params, batch.feats, batch.parent_mat, batch.n_valid)
             out = np.asarray(out)
             for row, i in enumerate(idxs):
                 orders[i] = out[row, : graphs[i].n].astype(np.int64)
         return orders
+
+    def fused_schedules(
+        self,
+        params,
+        graphs: list[CompGraph],
+        n_stages: int,
+        system: PipelineSystem,
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Decode + segment + repair every graph on device.
+
+        Returns per-graph ``(order, assignment)`` pairs, positionally
+        aligned with ``graphs``; each bucket runs as one jitted vmapped
+        XLA program and the host only packs inputs and slices outputs.
+        The result is identical to the host pipeline
+        ``repair(rho(greedy_order(g)))`` (property-tested).
+        """
+        system = system.with_stages(n_stages)
+        results: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(graphs)
+        for _, idxs, batch in self._packed_buckets(graphs):
+            fn = self._fused_fn(batch.bucket_n, batch.batch,
+                                batch.child_width, n_stages, system)
+            orders, assigns = fn(params, batch)
+            orders = np.asarray(orders)
+            assigns = np.asarray(assigns)
+            for row, i in enumerate(idxs):
+                n = graphs[i].n
+                results[i] = (orders[row, :n].astype(np.int64),
+                              assigns[row, :n].astype(np.int64))
+        return results

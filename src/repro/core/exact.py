@@ -41,22 +41,26 @@ __all__ = [
 def boundary_bytes(graph: CompGraph, order: np.ndarray) -> np.ndarray:
     """bytes[b] crossing boundary ``b`` (between order positions b-1 and b)
     for contiguous segmentations of ``order``: every tensor produced at
-    position < b whose last consumer sits at position >= b."""
+    position < b whose last consumer sits at position >= b.
+
+    Computed as a direct masked sum (not a diff/cumsum sweep): summing only
+    positive terms leaves no cancellation residue, so boundaries nothing
+    crosses are EXACTLY zero and boundaries crossed by the same tensor set
+    are bit-equal.  The DP's lexicographic tie-break depends on this — with
+    the old cumsum sweep, ~1e-19 rounding residue silently decided which of
+    two equal-cost segmentations won, which no fixed-shape device twin
+    (:func:`repro.core.segment.rho_dp_jax`) could reproduce."""
     n = graph.n
     pos = np.empty(n, dtype=np.int64)
     pos[order] = np.arange(n)
-    diff = np.zeros(n + 2)
-    last_child = graph.last_child_index()
+    # last consumer position of each produced tensor (-1 for sinks)
+    hi = np.full(n, -1, dtype=np.int64)
     for u in range(n):
-        if last_child[u] < 0:
-            continue
-        lo = pos[u] + 1
-        # positions of all children; crossing persists until last consumer pos
-        hi = max(pos[v] for v in graph.children[u])
-        if hi >= lo:
-            diff[lo] += graph.out_bytes[u]
-            diff[hi + 1] -= graph.out_bytes[u]
-    return np.cumsum(diff)[: n + 1]  # index 0 (model input) kept at 0
+        for v in graph.children[u]:
+            hi[u] = max(hi[u], pos[v])
+    b_idx = np.arange(n + 1)[:, None]
+    crossing = (b_idx > pos[None, :]) & (b_idx <= hi[None, :])
+    return np.where(crossing, graph.out_bytes[None, :], 0.0).sum(axis=1)
 
 
 def segment_cost_table(
@@ -82,12 +86,6 @@ def segment_cost_table(
     )
     cost[seg_flops < 0] = np.inf
     return cost
-
-
-def _lex_argmin(bottleneck: np.ndarray, latency: np.ndarray) -> int:
-    m = bottleneck.min()
-    cand = np.flatnonzero(bottleneck <= m * (1 + 1e-12) + 1e-30)
-    return int(cand[np.argmin(latency[cand])])
 
 
 def exact_dp(
@@ -126,7 +124,13 @@ def exact_dp(
             m = b.min(axis=0)
             elig = b <= m[None, :] * (1 + 1e-12) + 1e-30
             l_el = np.where(elig, l, np.inf)
-            arg = l_el.argmin(axis=0)                    # first min latency
+            lmin = l_el.min(axis=0)
+            # first split whose latency ties the minimum, at the same
+            # relative tolerance as the bottleneck eligibility — the banded
+            # lex-argmin the device DP (repro.core.segment.rho_dp_jax)
+            # mirrors at f32 scale, so tie resolution is rounding-robust
+            # and implementation-independent.
+            arg = (l_el <= lmin[None, :] * (1 + 1e-12) + 1e-30).argmax(axis=0)
             args[s] = arg
             f_b, f_l = b[arg, cols], l_el[arg, cols]
 

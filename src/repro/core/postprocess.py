@@ -18,6 +18,11 @@ a fixed point (bounded iterations; termination is tested on random graphs)
 and always finishes with a final dependency pass — monotonicity is the hard
 constraint, the co-consumer rule is best-effort (matching the paper's
 "minimum changes to the RL solution").
+
+:mod:`repro.core.segment` carries the jittable twin
+(:func:`~repro.core.segment.repair_jax`) the fused serving path deploys;
+it is bit-identical to this reference (all-integer arithmetic,
+property-tested), which stays the oracle.
 """
 
 from __future__ import annotations

@@ -228,20 +228,28 @@ def decode(
     return order.astype(jnp.int32), logp, ent
 
 
-def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid):
+def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid,
+         logits_builder=None):
     C, enc_state, emb = encode(params, feats, n_valid=n_valid)
+    logits_fn = None if logits_builder is None else logits_builder(params, C)
     return decode(
         params, C, emb, enc_state, parent_mat,
         sample_key=sample_key, mask_infeasible=mask_infeasible,
-        n_valid=n_valid,
+        logits_fn=logits_fn, n_valid=n_valid,
     )
 
 
 def greedy_order(params, feats, parent_mat, mask_infeasible=True,
-                 n_valid=None):
-    return _run(params, feats, parent_mat, None, mask_infeasible, n_valid)
+                 n_valid=None, logits_builder=None):
+    """``logits_builder(params, C) -> logits_fn`` overrides the pointer/
+    glimpse op after encoding (e.g. the Pallas kernel via
+    :func:`repro.kernels.ptr.ops.make_logits_fn`); None keeps the hoisted
+    pure-jnp path."""
+    return _run(params, feats, parent_mat, None, mask_infeasible, n_valid,
+                logits_builder)
 
 
 def sample_order(params, feats, parent_mat, key, mask_infeasible=True,
-                 n_valid=None):
-    return _run(params, feats, parent_mat, key, mask_infeasible, n_valid)
+                 n_valid=None, logits_builder=None):
+    return _run(params, feats, parent_mat, key, mask_infeasible, n_valid,
+                logits_builder)

@@ -1,20 +1,27 @@
 """RespectScheduler — the deployable facade (paper Fig. 1a, steps 1-4).
 
-``schedule(graph, n_stages)`` runs the full inference path:
+``schedule_many(graphs, n_stages)`` is the serving path: graphs are grouped
+into power-of-two size buckets (:mod:`repro.core.batching`) and every
+cache-miss bucket runs ONE jitted, vmapped, pad-aware XLA program that
+fuses the whole pipeline —
 
   step 1  graph is already a :class:`CompGraph` (DAG extraction happens in
           :mod:`repro.core.dnn_graphs` for the Table-I models and in
           :mod:`repro.core.partitioner` for pod-scale LMs);
   step 2  embed (:func:`repro.core.embedding.embed_graph`);
   step 3  LSTM-PtrNet greedy decode -> node sequence pi;
-  step 4  rho(pi) -> stage assignment, post-inference repair, ready for
-          deployment (the Edge TPU simulator or the pod pipeline runner).
+  step 4  rho(pi) -> stage assignment (:func:`repro.core.segment.rho_dp_jax`)
+          + post-inference repair (:func:`repro.core.segment.repair_jax`),
+          ready for deployment —
 
-``schedule_many(graphs, n_stages)`` is the serving-path batch API: graphs
-are grouped into power-of-two size buckets (:mod:`repro.core.batching`),
-each bucket decodes as one vmapped XLA program, and ``rho`` + repair run
-per graph on the host.  A content-hash LRU cache short-circuits repeated
-graphs (multi-tenant traffic re-submits the same model DAGs constantly).
+so the host only packs inputs, slices outputs and runs the cache.  A
+content-hash LRU cache short-circuits repeated graphs (multi-tenant traffic
+re-submits the same model DAGs constantly); ``schedule(graph, ...)`` is the
+single-graph convenience wrapper over the same engine and the same cache.
+
+The fused device pipeline is property-tested to match the host reference
+``repair(rho(order))`` exactly (:mod:`repro.core.rho`,
+:mod:`repro.core.postprocess`).
 
 Checkpoints are plain ``.npz`` parameter dumps; a pretrained agent trained by
 ``examples/train_respect.py`` ships with the benchmarks.
@@ -35,8 +42,6 @@ from .batching import BucketedDecoder
 from .costmodel import PipelineSystem
 from .embedding import embed_dim, embed_graph
 from .graph import CompGraph
-from .postprocess import repair
-from .rho import rho
 
 __all__ = ["RespectScheduler", "ScheduleResult"]
 
@@ -50,15 +55,15 @@ class ScheduleResult(dict):
 
 
 class RespectScheduler:
-    def __init__(self, params, hidden: int | None = None,
-                 mask_infeasible: bool = True, max_deg: int = 6,
-                 cache_size: int = 1024):
+    def __init__(self, params, mask_infeasible: bool = True, max_deg: int = 6,
+                 cache_size: int = 1024, logits_impl: str | None = None):
         self.params = params
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
         self._jitted: dict[int, callable] = {}
         self._decoder = BucketedDecoder(
-            mask_infeasible=mask_infeasible, max_deg=max_deg)
+            mask_infeasible=mask_infeasible, max_deg=max_deg,
+            logits_impl=logits_impl)
         self._cache: OrderedDict = OrderedDict()   # content hash -> result
         self._cache_size = cache_size
         self.cache_hits = 0
@@ -103,6 +108,7 @@ class RespectScheduler:
         return self._jitted[n]
 
     def order(self, graph: CompGraph) -> np.ndarray:
+        """Raw greedy decode of one graph (no rho/repair, no cache)."""
         feats = jnp.asarray(embed_graph(graph, self.max_deg))
         pmat = jnp.asarray(graph.parent_matrix(self.max_deg))
         order, _, _ = self._order_fn(graph.n)(self.params, feats, pmat)
@@ -114,23 +120,17 @@ class RespectScheduler:
         n_stages: int,
         system: PipelineSystem | None = None,
         return_timing: bool = False,
+        use_cache: bool = True,
     ) -> ScheduleResult:
-        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        """Schedule one graph: a batch-of-one through the serving engine,
+        sharing the fused per-bucket programs AND the content-hash LRU
+        schedule cache with :meth:`schedule_many`."""
         t0 = time.perf_counter()
-        order = self.order(graph)
-        t_net = time.perf_counter() - t0
-        assignment = rho(graph, order, n_stages, system)
-        assignment = repair(graph, assignment, n_stages)
-        t_total = time.perf_counter() - t0
-        res = ScheduleResult(
-            assignment=assignment,
-            order=order,
-            n_stages=n_stages,
-            model=graph.model_name,
-        )
+        res = self.schedule_many(
+            [graph], n_stages, system,
+            return_timing=return_timing, use_cache=use_cache)[0]
         if return_timing:
-            res["t_network_s"] = t_net
-            res["t_total_s"] = t_total
+            res["t_total_s"] = time.perf_counter() - t0
         return res
 
     # ------------------------------------------------------------------ #
@@ -145,6 +145,19 @@ class RespectScheduler:
         self.cache_hits = 0
         self.cache_misses = 0
 
+    def _result_from(self, entry: dict, n_stages: int, model: str,
+                     cache_hit: bool) -> ScheduleResult:
+        """Materialize a result as COPIES of the cache entry's arrays, so
+        no two results — and never the cache itself — share storage; a
+        caller mutating its result cannot poison later hits."""
+        return ScheduleResult(
+            assignment=entry["assignment"].copy(),
+            order=entry["order"].copy(),
+            n_stages=n_stages,
+            model=model,
+            cache_hit=cache_hit,
+        )
+
     def schedule_many(
         self,
         graphs: list[CompGraph],
@@ -153,13 +166,12 @@ class RespectScheduler:
         return_timing: bool = False,
         use_cache: bool = True,
     ) -> list[ScheduleResult]:
-        """Schedule a batch of graphs through the bucketed decode engine.
+        """Schedule a batch of graphs through the fused bucketed engine.
 
-        Results are positionally aligned with ``graphs`` and identical to
-        per-graph :meth:`schedule` output (the pad-aware decode emits the
-        same greedy order, and ``rho``/repair are the same host code).
-        Repeated graphs — by content hash, within this call or across
-        calls — are served from an LRU schedule cache.
+        Results are positionally aligned with ``graphs``.  Cache misses run
+        decode -> rho -> repair as one vmapped device program per size
+        bucket; repeated graphs — by content hash, within this call or
+        across calls — are served from an LRU schedule cache.
         """
         system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
         t0 = time.perf_counter()
@@ -170,15 +182,9 @@ class RespectScheduler:
             key = self._cache_key(g, n_stages, system) if use_cache else None
             if use_cache and key in self._cache:
                 self._cache.move_to_end(key)
-                cached = self._cache[key]
                 self.cache_hits += 1
-                results[i] = ScheduleResult(
-                    assignment=cached["assignment"].copy(),
-                    order=cached["order"].copy(),
-                    n_stages=n_stages,
-                    model=g.model_name,
-                    cache_hit=True,
-                )
+                results[i] = self._result_from(
+                    self._cache[key], n_stages, g.model_name, cache_hit=True)
             elif use_cache and key in seen:
                 seen[key].append(i)         # duplicate within this batch
             else:
@@ -186,47 +192,34 @@ class RespectScheduler:
                     seen[key] = [i]
                 misses.append(i)
 
-        t_decode = 0.0
+        t_fused = 0.0
         if misses:
             self.cache_misses += len(misses)
             td = time.perf_counter()
-            orders = self._decoder.greedy_orders(
-                self.params, [graphs[i] for i in misses])
-            t_decode = time.perf_counter() - td
-            for i, order in zip(misses, orders):
+            fused = self._decoder.fused_schedules(
+                self.params, [graphs[i] for i in misses], n_stages, system)
+            t_fused = time.perf_counter() - td
+            for i, (order, assignment) in zip(misses, fused):
                 g = graphs[i]
-                assignment = repair(
-                    g, rho(g, order, n_stages, system), n_stages)
-                results[i] = ScheduleResult(
-                    assignment=assignment,
-                    order=order,
-                    n_stages=n_stages,
-                    model=g.model_name,
-                    cache_hit=False,
-                )
+                entry = {"assignment": assignment, "order": order}
+                results[i] = self._result_from(
+                    entry, n_stages, g.model_name, cache_hit=False)
                 if use_cache:
                     key = self._cache_key(g, n_stages, system)
-                    # store copies: the returned result must not alias the
-                    # cache entry, or a caller mutating its result would
-                    # poison every later hit.
-                    self._cache[key] = {
-                        "assignment": assignment.copy(),
-                        "order": np.asarray(order).copy()}
+                    # the cache OWNS entry's arrays; every result (miss,
+                    # in-batch duplicate, later hit) gets fresh copies.
+                    self._cache[key] = entry
                     for j in seen.get(key, [])[1:]:
                         self.cache_hits += 1
-                        results[j] = ScheduleResult(
-                            assignment=assignment.copy(),
-                            order=order.copy(),
-                            n_stages=n_stages,
-                            model=graphs[j].model_name,
-                            cache_hit=True,
-                        )
+                        results[j] = self._result_from(
+                            entry, n_stages, graphs[j].model_name,
+                            cache_hit=True)
                     while len(self._cache) > self._cache_size:
                         self._cache.popitem(last=False)
 
         if return_timing:
             t_total = time.perf_counter() - t0
             for r in results:
-                r["t_decode_batch_s"] = t_decode
+                r["t_fused_batch_s"] = t_fused
                 r["t_total_batch_s"] = t_total
         return results

@@ -12,8 +12,12 @@ solver, restricted to the given order).  Properties:
 * rho is deterministic and cheap (poly-time), preserving the paper's claim
   that RL inference + rho replaces the exact search.
 
-A JAX twin of this DP lives in :mod:`repro.core.rl` so the cosine reward of
-Eq. 3 is computed inside the jitted training step.
+A JAX twin of this DP lives in :mod:`repro.core.segment`
+(:func:`~repro.core.segment.rho_dp_jax`, lexicographic tie-break included):
+the RL training step computes the Eq. 3 cosine reward with it, and the
+serving path (:mod:`repro.core.batching`) fuses it with decode + repair
+into one device program per size bucket.  This host version remains the
+reference oracle the property tests compare against.
 """
 
 from __future__ import annotations

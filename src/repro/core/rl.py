@@ -30,6 +30,7 @@ from .costmodel import PipelineSystem
 from .embedding import embed_graph
 from .exact import exact_bb, order_from_assignment
 from .graph import CompGraph
+from .segment import rho_dp_jax  # noqa: F401  (re-exported; serving twin)
 
 __all__ = [
     "GraphBatch",
@@ -117,11 +118,10 @@ def label_graphs(
     """Exact stage labels + imitation orders for a list of graphs.
 
     ``label_method="dp"`` solves all cache-miss graphs of equal size in ONE
-    vmapped XLA program (:func:`rho_dp_jax` over the identity topological
-    order — bottleneck-optimal contiguous segmentation like
-    :func:`exact_dp`, but in f32 and without its latency tie-break, so
-    bottleneck-tied splits may resolve differently), replacing the former
-    per-graph host loop.  ``"bb"`` keeps the branch-and-bound host solver
+    vmapped XLA program (:func:`repro.core.segment.rho_dp_jax` over the
+    identity topological order — the same contiguous-segmentation DP as
+    :func:`exact_dp`, lexicographic tie-break included, in f32), replacing
+    the former per-graph host loop.  ``"bb"`` keeps the branch-and-bound host solver
     for arbitrary-DAG exactness.  With ``cache_dir`` each
     graph's label is persisted as a tiny ``.npz`` keyed by content hash,
     so re-labeling the same graphs (e.g. deterministic ``DagSampler``
@@ -211,71 +211,11 @@ def pack_graphs(
 
 
 # --------------------------------------------------------------------- #
-# rho as a jittable DP (single graph; vmapped over the batch)
+# rho as a jittable DP: shared with serving — see repro.core.segment.
+# rho_dp_jax (imported above) mirrors exact_dp INCLUDING its lexicographic
+# (bottleneck, latency) tie-break, so dp labels and rewards resolve ties
+# exactly like the host solver.
 # --------------------------------------------------------------------- #
-def rho_dp_jax(
-    order, flops, param_bytes, out_bytes, parent_mat, n_stages: int,
-    system: PipelineSystem,
-):
-    """Optimal contiguous segmentation of `order` -> per-node stage (jnp).
-
-    Mirrors repro.core.exact.exact_dp (bottleneck objective; the latency
-    tie-break is dropped inside the reward — ties have equal reward anyway).
-    """
-    n = order.shape[0]
-    k = n_stages
-    pos = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-
-    f_ord = flops[order]
-    p_ord = param_bytes[order]
-    cf = jnp.concatenate([jnp.zeros(1), jnp.cumsum(f_ord)])
-    cp = jnp.concatenate([jnp.zeros(1), jnp.cumsum(p_ord)])
-
-    # boundary bytes: node u crosses boundaries (pos[u], last_child_pos[u]]
-    safe_parent = jnp.where(parent_mat >= 0, parent_mat, n)
-    child_pos = jnp.broadcast_to(pos[:, None], parent_mat.shape)
-    lc = (
-        jnp.full(n + 1, -1, jnp.int32)
-        .at[safe_parent.reshape(-1)]
-        .max(child_pos.reshape(-1))[:n]
-    )
-    b_idx = jnp.arange(n + 1)[:, None]                       # boundaries
-    crossing = (b_idx > pos[None, :]) & (b_idx <= lc[None, :])
-    bbytes = jnp.sum(jnp.where(crossing, out_bytes[None, :], 0.0), axis=1)
-
-    i_idx = jnp.arange(n + 1)
-    seg_flops = cf[None, :] - cf[:, None]
-    seg_params = cp[None, :] - cp[:, None]
-    off = jnp.maximum(0.0, seg_params - system.cache_bytes)
-    occ = (i_idx[None, :] - i_idx[:, None]) > 0
-    cost = (
-        bbytes[:, None] / system.link_bw
-        + seg_flops / (system.compute_rate * system.compute_eff)
-        + off / system.link_bw
-        + jnp.where(occ, system.fixed_overhead_s, 0.0)
-    )
-    cost = jnp.where(i_idx[:, None] <= i_idx[None, :], cost, jnp.inf)
-
-    f = cost[0]                                              # 1 stage
-    splits = []
-    for _ in range(1, k):
-        m = jnp.maximum(f[:, None], cost)                    # (n+1, n+1)
-        arg = jnp.argmin(m, axis=0)
-        splits.append(arg)
-        f = jnp.min(m, axis=0)
-
-    # backtrack (k is a static python int)
-    assign_pos = jnp.zeros(n, jnp.int32)
-    j = jnp.asarray(n, jnp.int32)
-    positions = jnp.arange(n, dtype=jnp.int32)
-    for s in range(k - 1, 0, -1):
-        i = splits[s - 1][j].astype(jnp.int32)
-        assign_pos = jnp.where((positions >= i) & (positions < j), s, assign_pos)
-        j = i
-    assign = jnp.zeros(n, jnp.int32).at[order].set(assign_pos)
-    return assign, f[n]
-
-
 def cosine_reward(assign, label_assign, eps: float = 1e-8):
     """Eq. 3: cosine similarity of stage vectors."""
     a = assign.astype(jnp.float32)

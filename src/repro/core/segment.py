@@ -1,0 +1,213 @@
+"""Device-side rho + repair: the jittable twins of the host scheduling tail.
+
+``schedule`` deploys ``repair(rho(pi))`` after the PtrNet decode; PR 1 still
+ran both per graph on the host after every batched decode, which made the
+O(n^2 k) segmentation DP and the fixed-point repair the serving bottleneck.
+This module holds the XLA-resident twins so the whole cache-miss pipeline —
+greedy decode -> contiguous-segmentation DP -> deployment repair — fuses
+into ONE jitted, vmapped program per size bucket (:mod:`repro.core.batching`):
+
+* :func:`rho_dp_jax` — the optimal-contiguous-segmentation DP of
+  :func:`repro.core.exact.exact_dp`, including its lexicographic
+  (bottleneck, latency) tie-break, generalized with ``n_valid`` so a padded
+  graph segments *bit-identically* to its unpadded self (padded order
+  positions carry zero cost and the per-stage dispatch overhead counts only
+  real nodes);
+* :func:`dependency_repair_jax` / :func:`co_consumer_repair_jax` /
+  :func:`repair_jax` — faithful transcriptions of
+  :mod:`repro.core.postprocess` as masked scans over the packed
+  parent/child matrices (``CompGraph.parent_matrix`` /
+  ``CompGraph.child_matrix``).  All-integer arithmetic, so the device
+  output is bit-identical to the numpy reference (property-tested on
+  random DAGs).
+
+The same :func:`rho_dp_jax` also computes the training reward of
+:mod:`repro.core.rl` (Eq. 3) and the vmapped exact-DP labeler, so training
+and serving share one segmentation program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import PipelineSystem
+
+__all__ = [
+    "rho_dp_jax",
+    "dependency_repair_jax",
+    "co_consumer_repair_jax",
+    "repair_jax",
+]
+
+
+def rho_dp_jax(
+    order,
+    flops,
+    param_bytes,
+    out_bytes,
+    parent_mat,
+    n_stages: int,
+    system: PipelineSystem,
+    n_valid=None,
+):
+    """Optimal contiguous segmentation of ``order`` -> per-node stage (jnp).
+
+    Mirrors :func:`repro.core.exact.exact_dp` including the lexicographic
+    (bottleneck, latency) tie-break, so bottleneck-tied splits resolve the
+    same way as the host solver.
+
+    ``n_valid`` (traced scalar) marks the first ``n_valid`` order positions
+    as real nodes; padded slots must carry zero flops/param/out bytes and
+    occupy the trailing order positions (the pad-aware decode guarantees
+    both).  Padded positions then contribute zero cost to every segment —
+    including the per-stage dispatch overhead, which counts *real* nodes
+    only — so the real-node assignment equals the unpadded DP's.
+    """
+    n = order.shape[0]
+    k = n_stages
+    nv = jnp.asarray(n if n_valid is None else n_valid, jnp.int32)
+    pos = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+
+    f_ord = flops[order]
+    p_ord = param_bytes[order]
+    cf = jnp.concatenate([jnp.zeros(1), jnp.cumsum(f_ord)])
+    cp = jnp.concatenate([jnp.zeros(1), jnp.cumsum(p_ord)])
+
+    # boundary bytes: node u crosses boundaries (pos[u], last_child_pos[u]]
+    safe_parent = jnp.where(parent_mat >= 0, parent_mat, n)
+    child_pos = jnp.broadcast_to(pos[:, None], parent_mat.shape)
+    lc = (
+        jnp.full(n + 1, -1, jnp.int32)
+        .at[safe_parent.reshape(-1)]
+        .max(child_pos.reshape(-1))[:n]
+    )
+    b_idx = jnp.arange(n + 1)[:, None]                       # boundaries
+    crossing = (b_idx > pos[None, :]) & (b_idx <= lc[None, :])
+    bbytes = jnp.sum(jnp.where(crossing, out_bytes[None, :], 0.0), axis=1)
+
+    i_idx = jnp.arange(n + 1)
+    seg_flops = cf[None, :] - cf[:, None]
+    seg_params = cp[None, :] - cp[:, None]
+    off = jnp.maximum(0.0, seg_params - system.cache_bytes)
+    # a segment is "occupied" (pays the dispatch overhead) iff it holds at
+    # least one REAL node — trailing padded slots must not re-introduce the
+    # overhead an empty host-side segment never pays.
+    cnt = jnp.minimum(i_idx, nv)
+    occ = (cnt[None, :] - cnt[:, None]) > 0
+    cost = (
+        bbytes[:, None] / system.link_bw
+        + seg_flops / (system.compute_rate * system.compute_eff)
+        + off / system.link_bw
+        + jnp.where(occ, system.fixed_overhead_s, 0.0)
+    )
+    cost = jnp.where(i_idx[:, None] <= i_idx[None, :], cost, jnp.inf)
+
+    # f_b[j], f_l[j]: best (bottleneck, latency) covering positions [0, j);
+    # args[s][j]: the lex-argmin split point, exactly as in exact_dp.
+    # Tie tolerance: 1e-6 relative, the f32 analogue of the host's 1e-12 —
+    # wide enough that XLA fusion noise (rematerialized cost entries can
+    # differ by a few ulps between program variants) cannot flip an exact
+    # tie, narrow enough that genuinely distinct segmentations stay apart.
+    tol = 1e-6
+    f_b = cost[0]
+    f_l = cost[0]
+    splits = []
+    for _ in range(1, k):
+        b = jnp.maximum(f_b[:, None], cost)                  # (i, j)
+        l = f_l[:, None] + cost
+        m = b.min(axis=0)
+        elig = b <= m * (1 + tol) + 1e-30
+        l_el = jnp.where(elig, l, jnp.inf)
+        lmin = l_el.min(axis=0)
+        # first split whose latency ties the minimum (banded lex-argmin)
+        arg = jnp.argmax(l_el <= lmin * (1 + tol) + 1e-30, axis=0)
+        splits.append(arg)
+        f_b = b[arg, i_idx]
+        f_l = l_el[arg, i_idx]
+
+    # backtrack (k is a static python int)
+    assign_pos = jnp.zeros(n, jnp.int32)
+    j = jnp.asarray(n, jnp.int32)
+    positions = jnp.arange(n, dtype=jnp.int32)
+    for s in range(k - 1, 0, -1):
+        i = splits[s - 1][j].astype(jnp.int32)
+        assign_pos = jnp.where((positions >= i) & (positions < j), s, assign_pos)
+        j = i
+    assign = jnp.zeros(n, jnp.int32).at[order].set(assign_pos)
+    return assign, f_b[n]
+
+
+def dependency_repair_jax(anc_mat, assign, n_stages: int):
+    """Jittable twin of :func:`repro.core.postprocess.dependency_repair`.
+
+    The host's sequential forward propagation computes, for every node, the
+    max clipped stage over its ancestors and itself — so with the ancestor
+    closure (``CompGraph.ancestor_matrix``) precomputed at pack time it is
+    ONE vectorized masked max-reduce, no sequential scan.  Integer ops
+    only: bit-identical.
+    """
+    out = jnp.clip(assign.astype(jnp.int32), 0, n_stages - 1)
+    return jnp.max(jnp.where(anc_mat, out[None, :], 0), axis=1)
+
+
+def co_consumer_repair_jax(parent_mat, child_mat, assign):
+    """Jittable twin of :func:`repro.core.postprocess.co_consumer_repair`.
+
+    ``child_mat`` is :meth:`CompGraph.child_matrix` — children in ascending
+    index order, -1 padded — so the (statically unrolled) inner loop
+    updates children in exactly the host's iteration order (a later
+    child's dependency floor may read a co-child updated earlier in the
+    same row).  The outer pass over producers stays a scan: the host's
+    in-place updates are visible to later rows.
+    """
+    n = parent_mat.shape[0]
+    big = jnp.int32(1 << 30)
+
+    def node_step(out, u):
+        ch = child_mat[u]
+        valid = ch >= 0
+        multi = jnp.sum(valid.astype(jnp.int32)) >= 2
+        # earliest child stage, frozen BEFORE this row's updates (host
+        # computes it once, before its inner loop)
+        earliest = jnp.min(jnp.where(valid, out[ch.clip(0)], big))
+        for c in range(child_mat.shape[1]):      # static width: unrolled
+            v = ch[c]
+            vc = v.clip(0)
+            pv = parent_mat[vc]
+            lo = jnp.max(jnp.where(pv >= 0, out[pv.clip(0)], 0))
+            new = jnp.maximum(earliest, lo)
+            out = out.at[vc].set(
+                jnp.where(multi & (v >= 0), new, out[vc]))
+        return out, None
+
+    out, _ = jax.lax.scan(node_step, assign.astype(jnp.int32), jnp.arange(n))
+    return out
+
+
+def repair_jax(parent_mat, child_mat, anc_mat, assign, n_stages: int,
+               max_iters: int = 8, enforce_co_consumer: bool = True):
+    """Jittable twin of :func:`repro.core.postprocess.repair`.
+
+    Alternates the two rules to a fixed point exactly like the host: a
+    ``while_loop`` stops as soon as an iteration is a no-op (the host's
+    break), bounded by ``max_iters``.  Re-applying a deterministic pass at
+    its fixed point is the identity, so under ``vmap`` the masked extra
+    iterations on already-converged lanes change nothing.
+    """
+    out = dependency_repair_jax(anc_mat, assign, n_stages)
+    if enforce_co_consumer:
+        def cond(state):
+            i, _, converged = state
+            return (i < max_iters) & ~converged
+
+        def body(state):
+            i, out, _ = state
+            nxt = dependency_repair_jax(
+                anc_mat, co_consumer_repair_jax(parent_mat, child_mat, out),
+                n_stages)
+            return i + 1, nxt, jnp.all(nxt == out)
+
+        _, out, _ = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), out, jnp.asarray(False)))
+    return dependency_repair_jax(anc_mat, out, n_stages)

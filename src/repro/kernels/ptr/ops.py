@@ -7,7 +7,7 @@ import jax
 from .kernel import pointer_step_pallas
 from .ref import reference_pointer_step
 
-__all__ = ["precompute_refs", "pointer_step"]
+__all__ = ["precompute_refs", "pointer_step", "make_logits_fn"]
 
 
 def precompute_refs(params, C):
@@ -39,3 +39,20 @@ def pointer_step(params, C, CWg, CWp, h, mask, *, impl: str | None = None):
         C, CWg, CWp, h, g["w_q"], g["v"], p["w_q"], p["v"], mask,
         interpret=(impl == "interpret"))
     return out[0] if unbatched else out
+
+
+def make_logits_fn(params, C, *, impl: str | None = None):
+    """Build a ``logits_fn(C, h, mask)`` for the ptrnet decode scan.
+
+    Precomputes the loop-invariant context projections once (per graph,
+    after encoding) and dispatches every decode step to
+    :func:`pointer_step` — the Pallas kernel on TPU, the pure-jnp oracle
+    elsewhere.  Plugs into ``ptrnet.greedy_order(..., logits_builder=...)``
+    so the batched serving path hits the fused kernel on TPU deployments.
+    """
+    CWg, CWp = precompute_refs(params, C)
+
+    def logits_fn(C_, h, mask):
+        return pointer_step(params, C_, CWg, CWp, h, mask, impl=impl)
+
+    return logits_fn

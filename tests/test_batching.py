@@ -99,9 +99,84 @@ def test_schedule_many_matches_schedule(sched):
     graphs += [sample_dag(np.random.default_rng(6), n=18, deg=3)]
     results = sched.schedule_many(graphs, 4, use_cache=False)
     for g, r in zip(graphs, results):
-        single = sched.schedule(g, 4)
+        single = sched.schedule(g, 4, use_cache=False)
         assert np.array_equal(single.assignment, r.assignment), g.model_name
         assert validate_monotone(g, r.assignment, 4)
+
+
+def test_fused_schedule_many_matches_host_pipeline(sched):
+    """The fused device program (decode -> rho_dp_jax -> repair_jax, one
+    vmapped XLA call per bucket) must equal the HOST reference pipeline
+    (unbatched per-size decode -> numpy rho -> numpy repair) exactly —
+    mixed sizes, so padding and batching are both exercised."""
+    from repro.core.postprocess import repair as host_repair
+    from repro.core.rho import rho as host_rho
+    rng = np.random.default_rng(8)
+    graphs = sample_batch(rng, 5, n=30)
+    graphs += [sample_dag(rng, n=n, deg=3) for n in (9, 14, 23)]
+    results = sched.schedule_many(graphs, 4, use_cache=False)
+    for g, r in zip(graphs, results):
+        order = sched.order(g)              # unbatched per-size jit decode
+        assert np.array_equal(order, r["order"]), g.model_name
+        host = host_repair(g, host_rho(g, order, 4), 4)
+        assert np.array_equal(host, r.assignment), g.model_name
+
+
+@pytest.mark.slow
+def test_schedule_many_64_mixed_matches_schedule(sched):
+    """Acceptance: a mixed-size 64-graph batch through the fused engine is
+    assignment-identical to 64 per-graph schedule calls (nightly tier)."""
+    rng = np.random.default_rng(17)
+    graphs = [sample_dag(rng, n=int(rng.integers(6, 41)),
+                         deg=int(rng.integers(2, 6))) for _ in range(64)]
+    results = sched.schedule_many(graphs, 4, use_cache=False)
+    for g, r in zip(graphs, results):
+        single = sched.schedule(g, 4, use_cache=False)
+        assert np.array_equal(single.assignment, r.assignment)
+        assert validate_monotone(g, r.assignment, 4)
+
+
+def test_schedule_single_shares_cache(sched):
+    """Satellite: single-graph schedule goes through the same content-hash
+    LRU as schedule_many — in both directions."""
+    g = sample_dag(np.random.default_rng(21), n=30, deg=3)
+    sched.clear_cache()
+    r1 = sched.schedule(g, 4)
+    assert not r1["cache_hit"] and sched.cache_misses == 1
+    r2 = sched.schedule(g, 4)
+    assert r2["cache_hit"] and sched.cache_hits == 1
+    r3 = sched.schedule_many([g], 4)[0]     # batch API hits the same entry
+    assert r3["cache_hit"]
+    assert np.array_equal(r1.assignment, r3.assignment)
+
+
+def test_result_mutation_cannot_poison_cache(sched):
+    """Satellite: every result (miss, in-batch duplicate, hit) owns fresh
+    copies; mutating one must not leak into the cache or other results."""
+    g = sample_dag(np.random.default_rng(22), n=30, deg=2)
+    sched.clear_cache()
+    r_miss, r_dup = sched.schedule_many([g, g], 4)
+    expected = r_miss.assignment.copy()
+    r_miss.assignment[:] = -7
+    r_miss["order"][:] = -7
+    r_dup.assignment[:] = -8
+    r_hit = sched.schedule_many([g], 4)[0]
+    assert r_hit["cache_hit"]
+    assert np.array_equal(r_hit.assignment, expected)
+    assert (r_hit["order"] >= 0).all()
+
+
+def test_bucketed_decoder_ref_kernel_impl_matches_default():
+    """logits_impl='ref' routes decode steps through kernels/ptr
+    (the TPU deployment path, jnp oracle on CPU) — same schedules."""
+    from repro.core import RespectScheduler
+    g = sample_dag(np.random.default_rng(23), n=20, deg=3)
+    s_default = RespectScheduler.init(seed=4, hidden=32)
+    s_kernel = RespectScheduler(s_default.params, logits_impl="ref")
+    r0 = s_default.schedule_many([g], 4, use_cache=False)[0]
+    r1 = s_kernel.schedule_many([g], 4, use_cache=False)[0]
+    assert np.array_equal(r0["order"], r1["order"])
+    assert np.array_equal(r0.assignment, r1.assignment)
 
 
 def test_schedule_many_cache_and_in_batch_dedup(sched):

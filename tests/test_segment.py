@@ -1,0 +1,143 @@
+"""Device-side rho + repair (repro.core.segment): property-tested against
+the host reference oracles across random DAGs, sizes and stage counts."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PipelineSystem, sample_dag
+from repro.core.postprocess import repair
+from repro.core.rho import rho
+from repro.core.segment import rho_dp_jax, repair_jax
+
+MAX_DEG = 6
+
+
+@functools.lru_cache(maxsize=64)
+def _dp_fn(n: int, k: int, system: PipelineSystem):
+    return jax.jit(lambda o, fl, pb, ob, pm: rho_dp_jax(
+        o, fl, pb, ob, pm, k, system))
+
+
+@functools.lru_cache(maxsize=64)
+def _dp_fn_padded(n: int, k: int, system: PipelineSystem):
+    return jax.jit(lambda o, fl, pb, ob, pm, nv: rho_dp_jax(
+        o, fl, pb, ob, pm, k, system, n_valid=nv))
+
+
+@functools.lru_cache(maxsize=64)
+def _repair_fn(n: int, mc: int, k: int):
+    return jax.jit(lambda pm, cm, am, a: repair_jax(pm, cm, am, a, k))
+
+
+def _random_topo_order(g, rng):
+    """A random linear extension — NOT just the identity order."""
+    indeg = np.array([len(p) for p in g.parents])
+    prio = rng.random(g.n)
+    ready = [v for v in range(g.n) if indeg[v] == 0]
+    order = []
+    while ready:
+        ready.sort(key=lambda v: prio[v])
+        u = ready.pop(0)
+        order.append(u)
+        for w in g.children[u]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                ready.append(w)
+    return np.asarray(order)
+
+
+def _graph_case(draw, max_n=16):
+    seed = draw(st.integers(0, 2**31 - 1))
+    n = draw(st.integers(5, max_n))
+    deg = draw(st.integers(1, 4))
+    rng = np.random.default_rng(seed)
+    g = sample_dag(rng, n=n, deg=min(deg, n - 2))
+    return g, rng
+
+
+graph_case = st.composite(_graph_case)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_case(), st.integers(2, 5))
+def test_rho_dp_jax_matches_host_rho(case, k):
+    """Jitted f32 DP == host f64 exact_dp on arbitrary topological orders
+    (lexicographic tie-break included)."""
+    g, rng = case
+    system = PipelineSystem(n_stages=k)
+    order = _random_topo_order(g, rng)
+    host = rho(g, order, k, system)
+    dev, _ = _dp_fn(g.n, k, system)(
+        jnp.asarray(order, jnp.int32),
+        jnp.asarray(g.flops, jnp.float32),
+        jnp.asarray(g.param_bytes, jnp.float32),
+        jnp.asarray(g.out_bytes, jnp.float32),
+        jnp.asarray(g.parent_matrix(MAX_DEG)))
+    assert np.array_equal(host, np.asarray(dev)), (g.n, k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_case(), st.integers(2, 5), st.integers(1, 8))
+def test_rho_dp_jax_padded_equals_unpadded(case, k, pad):
+    """A padded graph (zero-cost tail slots, n_valid) segments identically
+    to its unpadded self — the contract the bucketed serving path rests on."""
+    g, rng = case
+    system = PipelineSystem(n_stages=k)
+    order = _random_topo_order(g, rng)
+    host = rho(g, order, k, system)
+    n, N = g.n, g.n + pad
+    fl = np.zeros(N, np.float32); fl[:n] = g.flops
+    pb = np.zeros(N, np.float32); pb[:n] = g.param_bytes
+    ob = np.zeros(N, np.float32); ob[:n] = g.out_bytes
+    pm = np.full((N, MAX_DEG), -1, np.int32)
+    pm[:n] = g.parent_matrix(MAX_DEG)
+    padded_order = np.concatenate([order, np.arange(n, N)])
+    dev, _ = _dp_fn_padded(N, k, system)(
+        jnp.asarray(padded_order, jnp.int32), jnp.asarray(fl),
+        jnp.asarray(pb), jnp.asarray(ob), jnp.asarray(pm), jnp.int32(n))
+    assert np.array_equal(host, np.asarray(dev)[:n]), (g.n, k, pad)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_case(), st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_repair_jax_bit_identical_to_host(case, k, seed):
+    """All-integer repair: device output == host output exactly, including
+    the co-consumer rule's sequential update order."""
+    g, _ = case
+    ra = np.random.default_rng(seed).integers(0, k, size=g.n)
+    host = repair(g, ra, k)
+    mc = max(2, g.max_out_degree)
+    dev = _repair_fn(g.n, mc, k)(
+        jnp.asarray(g.parent_matrix(MAX_DEG)),
+        jnp.asarray(g.child_matrix(mc)),
+        jnp.asarray(g.ancestor_matrix()),
+        jnp.asarray(ra, jnp.int32))
+    assert np.array_equal(host, np.asarray(dev)), (g.n, k)
+
+
+@settings(max_examples=12, deadline=None)
+@given(graph_case(max_n=12), st.integers(2, 4))
+def test_fused_rho_repair_composition_matches_host(case, k):
+    """repair_jax(rho_dp_jax(...)) — the exact composition the fused
+    serving program deploys — equals host repair(rho(...))."""
+    g, rng = case
+    system = PipelineSystem(n_stages=k)
+    order = _random_topo_order(g, rng)
+    host = repair(g, rho(g, order, k, system), k)
+    dev_assign, _ = _dp_fn(g.n, k, system)(
+        jnp.asarray(order, jnp.int32),
+        jnp.asarray(g.flops, jnp.float32),
+        jnp.asarray(g.param_bytes, jnp.float32),
+        jnp.asarray(g.out_bytes, jnp.float32),
+        jnp.asarray(g.parent_matrix(MAX_DEG)))
+    mc = max(2, g.max_out_degree)
+    dev = _repair_fn(g.n, mc, k)(
+        jnp.asarray(g.parent_matrix(MAX_DEG)),
+        jnp.asarray(g.child_matrix(mc)),
+        jnp.asarray(g.ancestor_matrix()),
+        dev_assign)
+    assert np.array_equal(host, np.asarray(dev)), (g.n, k)
