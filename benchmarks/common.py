@@ -27,9 +27,14 @@ def emit(name: str, us_per_call: float, derived: str) -> str:
 
 
 def load_agent():
-    """The trained RESPECT agent if present, else fresh weights."""
+    """The trained RESPECT agent if present, else fresh weights.
+
+    Looks for the checkpoint-manager directory format first (what
+    ``examples/train_respect.py`` writes now), then the legacy flat
+    ``.npz`` that older training runs produced."""
     from repro.core import RespectScheduler
-    path = Path("artifacts/respect_agent.npz")
-    if path.exists():
-        return RespectScheduler.load(path), True
+    for path in (Path("artifacts/respect_agent"),
+                 Path("artifacts/respect_agent.npz")):
+        if path.exists():
+            return RespectScheduler.load(path), True
     return RespectScheduler.init(seed=0), False

@@ -1,0 +1,175 @@
+"""Training-throughput benchmark for the unified padded REINFORCE engine.
+
+Two phases:
+
+* **fixed** — the paper's |V| = 30 equal-size setup (the config the
+  pre-refactor trainer was measured at), timed after compile: steps/s and
+  graphs/s are the headline regression metrics;
+* **mixed** — the mixed-size (10..50) bucketed curriculum stream with
+  background prefetch: graphs/s across heterogeneous per-bucket packs,
+  counting only real (non-padding) graphs.
+
+Writes ``BENCH_train.json`` (consumed by ``scripts/check_bench_regression``
+nightly: throughput floors are relative to the checked-in baseline; the
+reward/finite flags are hard invariants).  ``--check`` makes the process
+exit non-zero unless the short run improved the greedy eval reward over
+init with finite metrics — the CI training smoke gate.
+
+    PYTHONPATH=src python -m benchmarks.train_bench --smoke --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import DagSampler, PipelineSystem, prefetch  # noqa: E402
+from repro.core.rl import RLTrainer  # noqa: E402
+
+from .common import emit  # noqa: E402
+
+
+def _finite(metrics: dict) -> bool:
+    return bool(np.isfinite([v for v in metrics.values()]).all())
+
+
+def run(smoke: bool = False, out_json: str | None = None,
+        steps: int | None = None, batch: int | None = None,
+        hidden: int | None = None, n_devices: int | None = None,
+        check: bool = False) -> dict:
+    stages = 4
+    system = PipelineSystem(n_stages=stages)
+    batch = batch or (32 if smoke else 64)
+    divisor = n_devices or 1
+    batch += -batch % divisor     # fixed-phase packs are exact: keep B % N == 0
+    hidden = hidden or (64 if smoke else 128)
+    steps = steps or (30 if smoke else 60)
+    timed = max(8, steps // 3)
+    key = jax.random.PRNGKey(0)
+    summary: dict = {
+        "config": {"batch": batch, "hidden": hidden, "steps": steps,
+                   "stages": stages, "smoke": smoke,
+                   "n_devices": n_devices or 1},
+    }
+
+    # ---------------- fixed-size phase (pre-refactor comparable) -------- #
+    sampler = DagSampler(seed=0, n=30)
+    trainer = RLTrainer(n_stages=stages, system=system, hidden=hidden,
+                        lr=3e-3, seed=0, n_devices=n_devices)
+    eval_batch = DagSampler(seed=999, n=30).next_packed_batch(
+        64, stages, system)
+    r_init = trainer.evaluate(eval_batch)["reward_greedy"]
+
+    rewards: list[float] = []
+    all_finite = True
+    batch0 = sampler.next_packed_batch(batch, stages, system)
+    key, k = jax.random.split(key)
+    m = trainer.train_step(batch0, k)       # compile step
+    rewards.append(m["reward_sample"])
+    all_finite &= _finite(m)
+    for _ in range(steps - 1):
+        b = sampler.next_packed_batch(batch, stages, system)
+        key, k = jax.random.split(key)
+        m = trainer.train_step(b, k)
+        rewards.append(m["reward_sample"])
+        all_finite &= _finite(m)
+        if len(rewards) % 10 == 0:
+            trainer.maybe_update_baseline(eval_batch)
+
+    # timed steps on a warm program over PRE-PACKED batches: pure step
+    # throughput, directly comparable to the pre-refactor trainer (which
+    # was measured the same way); host labeling cost lives in the mixed
+    # phase below, where the stream runs end to end.
+    prepacked = [sampler.next_packed_batch(batch, stages, system)
+                 for _ in range(4)]
+    t0 = time.perf_counter()
+    for i in range(timed):
+        key, k = jax.random.split(key)
+        trainer.train_step(prepacked[i % len(prepacked)], k)
+    jax.block_until_ready(trainer.params["w_in"])
+    dt = time.perf_counter() - t0
+    r_final = trainer.evaluate(eval_batch)["reward_greedy"]
+    summary.update(
+        steps_per_s_fixed=timed / dt,
+        graphs_per_s_fixed=timed * batch / dt,
+        reward_init=r_init, reward_final=r_final,
+        reward_improved=bool(r_final > r_init),
+        metrics_finite=bool(all_finite),
+        reward_head=[round(r, 5) for r in rewards[:10]],
+    )
+    emit("train_fixed_step", dt / timed * 1e6,
+         f"steps/s={timed / dt:.2f};graphs/s={timed * batch / dt:.1f}")
+
+    # ---------------- mixed-size bucketed curriculum phase -------------- #
+    # end-to-end pipeline rate: host sampling + exact labeling + packing
+    # (prefetched) + device steps.  Warm two epochs first so the timed
+    # pass mostly reuses compiled (bucket_n, B) shapes.
+    mixed = DagSampler(seed=1, n=(10, 50))
+    packs = list(mixed.packed_stream(batch, stages, system,
+                                     batches_per_epoch=6, epochs=1,
+                                     batch_divisor=divisor))
+    for p in packs:                          # compile each bucket shape
+        key, k = jax.random.split(key)
+        trainer.train_step(p, k)
+    stream = prefetch(mixed.packed_stream(
+        batch, stages, system, batches_per_epoch=3, epochs=1,
+        batch_divisor=divisor), depth=2)
+    n_graphs = 0
+    n_packs = 0
+    t0 = time.perf_counter()
+    for p in stream:
+        key, k = jax.random.split(key)
+        m = trainer.train_step(p, k)
+        n_graphs += int(m["n_graphs"])
+        n_packs += 1
+        all_finite &= _finite(m)
+    jax.block_until_ready(trainer.params["w_in"])
+    dt = time.perf_counter() - t0
+    summary.update(
+        graphs_per_s_mixed=n_graphs / dt,
+        packs_per_s_mixed=n_packs / dt,
+        metrics_finite=bool(all_finite),
+    )
+    emit("train_mixed_pack", dt / max(n_packs, 1) * 1e6,
+         f"graphs/s={n_graphs / dt:.1f};buckets={n_packs}")
+
+    if out_json:
+        Path(out_json).write_text(json.dumps(summary, indent=1))
+        print(f"# wrote {out_json}")
+    if check:
+        ok = summary["reward_improved"] and summary["metrics_finite"]
+        print(f"# smoke check: reward {r_init:.4f} -> {r_final:.4f}, "
+              f"finite={summary['metrics_finite']} -> "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            raise SystemExit(1)
+    return summary
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--hidden", type=int, default=None)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--out-json", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless reward improved and metrics finite")
+    args = ap.parse_args()
+    out = args.out_json or ("BENCH_train.json" if args.smoke else None)
+    run(smoke=args.smoke, out_json=out, steps=args.steps, batch=args.batch,
+        hidden=args.hidden, n_devices=args.devices, check=args.check)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,8 +24,11 @@ from pathlib import Path
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("fresh", help="summary json from this run")
-    ap.add_argument("baseline", help="checked-in baseline json")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="smoke summary json from this run (omit for a "
+                         "train-only guard)")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="checked-in smoke baseline json")
     ap.add_argument("--metric", action="append", default=None,
                     help="metric(s) to guard (repeatable); default: "
                          "speedup_traffic")
@@ -36,30 +39,60 @@ def main() -> int:
                          "host-reference exactness flag "
                          "(match_fused_vs_host_pipeline), which the smoke "
                          "schema does not carry")
+    ap.add_argument("--train-fresh", default=None,
+                    help="fresh BENCH_train-schema json; guards training "
+                         "throughput (steps_per_s_fixed, "
+                         "graphs_per_s_mixed) against --train-baseline and "
+                         "the reward_improved/metrics_finite hard flags")
+    ap.add_argument("--train-baseline", default=None,
+                    help="checked-in BENCH_train.json baseline")
     args = ap.parse_args()
     metrics = args.metric or ["speedup_traffic"]
-
-    fresh = json.loads(Path(args.fresh).read_text())
-    base = json.loads(Path(args.baseline).read_text())
+    if args.fresh is None and args.train_fresh is None:
+        ap.error("nothing to guard: pass FRESH BASELINE and/or --train-fresh")
+    if args.fresh is not None and args.baseline is None:
+        ap.error("FRESH given without BASELINE")
 
     failed = False
-    for m in metrics:
-        if m not in base:
+
+    def guard_ratio(fresh_d, base_d, m):
+        nonlocal failed
+        if m not in base_d:
             print(f"[guard] SKIP {m}: not in baseline")
-            continue
-        if m not in fresh:
+            return
+        if m not in fresh_d:
             print(f"[guard] FAIL {m}: missing from fresh summary")
             failed = True
-            continue
-        floor = base[m] * args.min_ratio
-        status = "FAIL" if fresh[m] < floor else "ok"
-        failed |= fresh[m] < floor
-        print(f"[guard] {status:4s} {m}: fresh={fresh[m]:.3f} "
-              f"baseline={base[m]:.3f} floor={floor:.3f}")
+            return
+        floor = base_d[m] * args.min_ratio
+        status = "FAIL" if fresh_d[m] < floor else "ok"
+        failed |= fresh_d[m] < floor
+        print(f"[guard] {status:4s} {m}: fresh={fresh_d[m]:.3f} "
+              f"baseline={base_d[m]:.3f} floor={floor:.3f}")
+
+    if args.fresh is not None:
+        fresh = json.loads(Path(args.fresh).read_text())
+        base = json.loads(Path(args.baseline).read_text())
+        for m in metrics:
+            guard_ratio(fresh, base, m)
+
+    if args.train_fresh:
+        tf = json.loads(Path(args.train_fresh).read_text())
+        tb = (json.loads(Path(args.train_baseline).read_text())
+              if args.train_baseline else {})
+        for m in ("steps_per_s_fixed", "graphs_per_s_mixed"):
+            guard_ratio(tf, tb, m)
+        for flag in ("reward_improved", "metrics_finite"):
+            if tf.get(flag) is not True:
+                print(f"[guard] FAIL {flag}: training smoke invariant "
+                      f"broken ({args.train_fresh})")
+                failed = True
     # exact-match flags are hard invariants, not ratios.  The smoke flags
     # compare the two serving APIs (batch-of-1 vs batch-of-N programs);
     # the serve summary carries the one vs the HOST reference pipeline.
-    checks = {args.fresh: ("match_exact_distinct", "match_exact_traffic")}
+    checks = {}
+    if args.fresh is not None:
+        checks[args.fresh] = ("match_exact_distinct", "match_exact_traffic")
     if args.serve_fresh:
         checks[args.serve_fresh] = ("match_fused_vs_host_pipeline",)
     for path, flags in checks.items():

@@ -36,7 +36,8 @@ from pathlib import Path
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree",
+           "load_pytree_dict", "is_checkpoint_dir"]
 
 
 def _flatten_with_names(tree):
@@ -117,6 +118,30 @@ def load_pytree(directory: str | Path, target_tree, shardings=None):
         out.append(val.astype(ref.dtype) if hasattr(ref, "dtype") else val)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(target_tree), out)
+
+
+def is_checkpoint_dir(path: str | Path) -> bool:
+    """True when ``path`` is a directory written by :func:`save_pytree`."""
+    return (Path(path) / "manifest.json").exists()
+
+
+def load_pytree_dict(directory: str | Path):
+    """Restore a checkpoint whose tree is pure nested dicts WITHOUT a target
+    tree: leaf names in the manifest are slash-joined dict keys, so the
+    structure reconstructs from the names alone.  This is what lets a
+    scheduler checkpoint load standalone (no model code needed to build a
+    template first)."""
+    directory = Path(directory)
+    manifest = json.loads((directory / "manifest.json").read_text())
+    out: dict = {}
+    for entry in manifest["leaves"]:
+        parts = entry["name"].split("/")
+        d = out
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jax.numpy.asarray(
+            _read_array(directory / entry["file"], entry))
+    return out
 
 
 class CheckpointManager:

@@ -82,6 +82,17 @@ class PaddedGraphBatch:
     embeddings and parent matrices for the decode, the three cost
     attributes for the segmentation DP, and the packed child matrix for
     the co-consumer repair rule.
+
+    The optional ``label_assign``/``label_order`` fields carry exact-solver
+    supervision (zero padded past ``n_valid``); they make this the ONE batch
+    representation shared by serving (labels absent) and RL training
+    (labels present) — see :mod:`repro.core.rl`.
+
+    ``dense`` is a STATIC (pytree-aux) flag set at pack time: True iff every
+    graph fills ``bucket_n`` exactly.  Consumers use it to skip the
+    ``n_valid`` masking machinery entirely for equal-size packs (e.g. the
+    paper's fixed |V| = 30 training), which keeps the unified
+    representation free on the homogeneous fast path.
     """
 
     feats: jnp.ndarray        # (B, bucket_n, F) embedding rows, zero padded
@@ -92,15 +103,19 @@ class PaddedGraphBatch:
     param_bytes: jnp.ndarray  # (B, bucket_n) float32, zero padded
     out_bytes: jnp.ndarray    # (B, bucket_n) float32, zero padded
     n_valid: jnp.ndarray      # (B,) int32 real node count per graph
+    label_assign: jnp.ndarray | None = None  # (B, bucket_n) int32, 0 padded
+    label_order: jnp.ndarray | None = None   # (B, bucket_n) int32, 0 padded
+    dense: bool = False       # static: all graphs fill bucket_n exactly
 
     def tree_flatten(self):
         return (self.feats, self.parent_mat, self.child_mat,
                 self.ancestor_mat, self.flops, self.param_bytes,
-                self.out_bytes, self.n_valid), None
+                self.out_bytes, self.n_valid, self.label_assign,
+                self.label_order), self.dense
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, dense=aux)
 
     @property
     def batch(self) -> int:
@@ -114,6 +129,14 @@ class PaddedGraphBatch:
     def child_width(self) -> int:
         return self.child_mat.shape[2]
 
+    @property
+    def has_labels(self) -> bool:
+        return self.label_assign is not None
+
+    def valid_mask(self) -> jnp.ndarray:
+        """(B, bucket_n) bool: True on real-node slots."""
+        return jnp.arange(self.bucket_n)[None, :] < self.n_valid[:, None]
+
     def pad_batch(self, bucket_b: int) -> "PaddedGraphBatch":
         """Pad the batch dimension with inert ``n_valid = 0`` rows."""
         pad = bucket_b - self.batch
@@ -123,6 +146,7 @@ class PaddedGraphBatch:
             return self
         zrow = lambda a: jnp.zeros((pad,) + a.shape[1:], a.dtype)
         neg = lambda a: jnp.full((pad,) + a.shape[1:], -1, a.dtype)
+        zcat = lambda a: None if a is None else jnp.concatenate([a, zrow(a)])
         return PaddedGraphBatch(
             feats=jnp.concatenate([self.feats, zrow(self.feats)]),
             parent_mat=jnp.concatenate([self.parent_mat,
@@ -135,6 +159,9 @@ class PaddedGraphBatch:
                                          zrow(self.param_bytes)]),
             out_bytes=jnp.concatenate([self.out_bytes, zrow(self.out_bytes)]),
             n_valid=jnp.concatenate([self.n_valid, zrow(self.n_valid)]),
+            label_assign=zcat(self.label_assign),
+            label_order=zcat(self.label_order),
+            dense=False,    # inert rows have n_valid = 0
         )
 
 
@@ -153,13 +180,19 @@ def pack_padded(
     min_bucket: int = MIN_BUCKET,
     child_width: int | None = None,
     decode_only: bool = False,
+    labels: tuple[list, list] | None = None,
 ) -> PaddedGraphBatch:
     """Embed + pad a list of graphs to a common ``bucket_n`` node count.
 
     ``decode_only`` skips the repair-side structures — the O(n^2) ancestor
     closure and the child matrix become zero-width placeholders — for
     callers that only run the decode (``greedy_orders``); the fused
-    schedule path packs everything."""
+    schedule path packs everything.
+
+    ``labels`` (optional) is the ``(assigns, orders)`` pair from
+    :func:`repro.core.rl.label_graphs` — per-graph arrays of length ``g.n``
+    that are zero padded into the batch's ``label_assign``/``label_order``
+    fields, turning the serving pack into a training pack."""
     if not graphs:
         raise ValueError("empty graph list")
     n_max = max(g.n for g in graphs)
@@ -179,6 +212,10 @@ def pack_padded(
     param_bytes = np.zeros((B, bucket_n), dtype=np.float32)
     out_bytes = np.zeros((B, bucket_n), dtype=np.float32)
     n_valid = np.zeros(B, dtype=np.int32)
+    la = lo = None
+    if labels is not None:
+        la = np.zeros((B, bucket_n), dtype=np.int32)
+        lo = np.zeros((B, bucket_n), dtype=np.int32)
     for i, g in enumerate(graphs):
         f = embed_graph(g, max_deg)
         if feats is None:
@@ -192,6 +229,9 @@ def pack_padded(
         param_bytes[i, : g.n] = g.param_bytes
         out_bytes[i, : g.n] = g.out_bytes
         n_valid[i] = g.n
+        if labels is not None:
+            la[i, : g.n] = labels[0][i]
+            lo[i, : g.n] = labels[1][i]
     return PaddedGraphBatch(
         feats=jnp.asarray(feats),
         parent_mat=jnp.asarray(pmat),
@@ -201,6 +241,9 @@ def pack_padded(
         param_bytes=jnp.asarray(param_bytes),
         out_bytes=jnp.asarray(out_bytes),
         n_valid=jnp.asarray(n_valid),
+        label_assign=None if la is None else jnp.asarray(la),
+        label_order=None if lo is None else jnp.asarray(lo),
+        dense=all(g.n == bucket_n for g in graphs),
     )
 
 

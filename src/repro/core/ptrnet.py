@@ -20,7 +20,12 @@ freezes its latent state after ``n_valid`` rows, the pointer mask excludes
 padded slots during the first ``n_valid`` decode steps, and padded steps
 contribute exactly zero log-prob/entropy — so the valid prefix of a padded
 greedy decode emits the same order as the unpadded decode of the same
-graph (log-probs agree up to float-reduction rounding).
+graph (log-probs agree up to float-reduction rounding).  The stochastic
+decode is pad-invariant too: per-step keys come from ``fold_in`` (not a
+length-dependent ``split``) and the categorical draw is an inverse-CDF
+pick from one scalar uniform, so a padded sampled decode emits the same
+sequence as its unpadded self — which is what lets mixed-size padded RL
+training steps reproduce the per-size path exactly.
 """
 
 from __future__ import annotations
@@ -183,8 +188,11 @@ def decode(
         ref_p = C @ params["pointer"]["w_ref"]
         logits_fn = functools.partial(
             _pointer_logits_hoisted, params, ref_g, ref_p)
+    # per-step keys via fold_in (NOT split(key, n)): the key of decode step
+    # i is independent of the padded length, which is what makes a padded
+    # stochastic decode emit the same sequence as its unpadded self.
     keys = (
-        jax.random.split(sample_key, n)
+        jax.vmap(lambda i: jax.random.fold_in(sample_key, i))(jnp.arange(n))
         if sample_key is not None
         else jnp.zeros((n, 2), jnp.uint32)
     )
@@ -211,7 +219,17 @@ def decode(
             logits = logits_fn(C, h, mask)
         logprobs = jax.nn.log_softmax(logits)
         if sample_key is not None:
-            idx = jax.random.categorical(key, logits)
+            # inverse-CDF categorical draw from ONE scalar uniform.  Masked
+            # slots carry exactly-zero probability, so the cumsum prefix —
+            # and hence the sampled index — is identical for the padded and
+            # unpadded decode of the same graph (gumbel-based sampling is
+            # not: its noise vector depends on the padded length).
+            probs_cdf = jnp.cumsum(jnp.exp(logprobs))
+            t = jax.random.uniform(key, ()) * probs_cdf[-1]
+            idx = jnp.argmax(probs_cdf > t)
+            last_live = jnp.argmax(
+                jnp.where(jnp.exp(logprobs) > 0, jnp.arange(n), -1))
+            idx = jnp.where(probs_cdf[-1] > t, idx, last_live)
         else:
             idx = jnp.argmax(logits)
         probs = jnp.exp(logprobs)

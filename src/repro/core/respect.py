@@ -23,8 +23,10 @@ The fused device pipeline is property-tested to match the host reference
 ``repair(rho(order))`` exactly (:mod:`repro.core.rho`,
 :mod:`repro.core.postprocess`).
 
-Checkpoints are plain ``.npz`` parameter dumps; a pretrained agent trained by
-``examples/train_respect.py`` ships with the benchmarks.
+Checkpoints use the :mod:`repro.checkpoint.manager` directory format
+(manifest + one raw buffer per leaf — atomic, dtype-exact); legacy ``.npz``
+parameter dumps from older agents still load.  A pretrained agent trained
+by ``examples/train_respect.py`` ships with the benchmarks.
 """
 
 from __future__ import annotations
@@ -40,7 +42,7 @@ import numpy as np
 from . import ptrnet
 from .batching import BucketedDecoder
 from .costmodel import PipelineSystem
-from .embedding import embed_dim, embed_graph
+from .embedding import embed_dim
 from .graph import CompGraph
 
 __all__ = ["RespectScheduler", "ScheduleResult"]
@@ -60,7 +62,6 @@ class RespectScheduler:
         self.params = params
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
-        self._jitted: dict[int, callable] = {}
         self._decoder = BucketedDecoder(
             mask_infeasible=mask_infeasible, max_deg=max_deg,
             logits_impl=logits_impl)
@@ -78,18 +79,25 @@ class RespectScheduler:
         return cls(params, mask_infeasible=mask_infeasible, max_deg=max_deg)
 
     def save(self, path: str | Path) -> None:
-        flat = {}
-        leaves, treedef = jax.tree_util.tree_flatten_with_path(self.params)
-        for kp, leaf in leaves:
-            flat[jax.tree_util.keystr(kp)] = np.asarray(leaf)
-        np.savez(path, **flat)
+        """Write the agent checkpoint in the repo-wide
+        :func:`repro.checkpoint.manager.save_pytree` directory format
+        (manifest.json + raw leaf buffers; atomic tmp+rename)."""
+        from ..checkpoint import save_pytree
+        save_pytree(self.params, path)
 
     @classmethod
     def load(cls, path: str | Path, **kw) -> "RespectScheduler":
+        """Load a checkpoint — the manager directory format, or (back-
+        compat) the legacy flat ``.npz`` with ``["enc"]["wx"]``-style keys
+        that pre-refactor agents shipped."""
+        from ..checkpoint import is_checkpoint_dir, load_pytree_dict
+        path = Path(path)
+        if is_checkpoint_dir(path):
+            return cls(load_pytree_dict(path), **kw)
         data = np.load(path)
         params: dict = {}
         for key in data.files:
-            # keys look like ["enc"]["wx"]
+            # legacy keystr keys look like ["enc"]["wx"]
             parts = [p.strip("'\"") for p in key.strip("[]").split("][")]
             d = params
             for p in parts[:-1]:
@@ -98,21 +106,13 @@ class RespectScheduler:
         return cls(params, **kw)
 
     # ------------------------------------------------------------------ #
-    def _order_fn(self, n: int):
-        """Per-size jitted greedy decode (sizes are few: one per model)."""
-        if n not in self._jitted:
-            self._jitted[n] = jax.jit(
-                lambda params, feats, pmat: ptrnet.greedy_order(
-                    params, feats, pmat, self.mask_infeasible)
-            )
-        return self._jitted[n]
-
     def order(self, graph: CompGraph) -> np.ndarray:
-        """Raw greedy decode of one graph (no rho/repair, no cache)."""
-        feats = jnp.asarray(embed_graph(graph, self.max_deg))
-        pmat = jnp.asarray(graph.parent_matrix(self.max_deg))
-        order, _, _ = self._order_fn(graph.n)(self.params, feats, pmat)
-        return np.asarray(order)
+        """Raw greedy decode of one graph (no rho/repair, no cache).
+
+        Routed through the shared :class:`BucketedDecoder`, so the Pallas
+        ``logits_builder`` path and the bucketed compile cache apply here
+        exactly as on the serving path (no per-size legacy programs)."""
+        return self._decoder.greedy_orders(self.params, [graph])[0]
 
     def schedule(
         self,

@@ -12,6 +12,27 @@ Gradient (Eq. 6): REINFORCE with a *rollout baseline* b(G) (Kool et al. [7]):
 the advantage is R(sample) - R(greedy rollout of the best-so-far policy);
 baseline parameters are refreshed from the online policy whenever the online
 policy's greedy reward improves on an eval batch (`maybe_update_baseline`).
+
+Batch representation: training consumes the SAME pad-aware
+:class:`repro.core.batching.PaddedGraphBatch` the serving engine runs on —
+graphs of mixed sizes pad to a power-of-two node bucket, ``n_valid`` marks
+the real prefix, and ``label_assign``/``label_order`` carry the exact-solver
+supervision.  Every step quantity is masked: the decode emits zero
+logp/entropy on padded steps (:mod:`repro.core.ptrnet`), the segmentation DP
+is ``n_valid``-generalized (:mod:`repro.core.segment`), stage vectors are
+zeroed past ``n_valid`` before the cosine, and inert batch-padding rows
+(``n_valid == 0``) carry zero weight in every mean.  Stage vectors are small
+integers, so the cosine's sums are exact in f32 — rewards, labels and
+exact-match of a padded mixed-size step are *bit-identical* to the per-size
+unpadded path (parity-tested).
+
+Scale: ``make_train_step(..., mesh=...)`` runs the step data-parallel via
+``shard_map`` over the batch axis — per-device microbatches, psum-reduced
+gradient/metric sums normalized by the global valid-graph count, one
+replicated parameter update — so the sharded trajectory matches the
+single-device trajectory at equal global batch.  ``TrainState`` makes the
+whole trainer functional (params, baseline, opt state, step, best baseline
+reward), which is what lets :mod:`repro.checkpoint.manager` round-trip it.
 """
 
 from __future__ import annotations
@@ -20,76 +41,50 @@ import dataclasses
 import functools
 import hashlib
 from pathlib import Path
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .. import optim
 from . import ptrnet
+from .batching import PaddedGraphBatch, bucket_for, pack_padded
 from .costmodel import PipelineSystem
-from .embedding import embed_graph
 from .exact import exact_bb, order_from_assignment
 from .graph import CompGraph
-from .segment import rho_dp_jax  # noqa: F401  (re-exported; serving twin)
+from .segment import rho_dp_batch, rho_dp_jax  # noqa: F401  (serving twins)
 
 __all__ = [
-    "GraphBatch",
     "label_graphs",
     "pack_graphs",
     "rho_dp_jax",
     "cosine_reward",
+    "make_rollout_fn",
     "make_train_step",
     "make_eval_fn",
+    "TrainState",
+    "init_train_state",
     "RLTrainer",
 ]
 
 
 # --------------------------------------------------------------------- #
-# batched graph representation (fixed shapes for jit)
+# exact labeling (vmapped pad-aware DP, on-disk cache)
 # --------------------------------------------------------------------- #
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class GraphBatch:
-    """Fixed-shape jnp pack of B graphs with n nodes each."""
-
-    feats: jnp.ndarray        # (B, n, F) embedding rows
-    parent_mat: jnp.ndarray   # (B, n, D) int32, -1 padded
-    flops: jnp.ndarray        # (B, n)
-    param_bytes: jnp.ndarray  # (B, n)
-    out_bytes: jnp.ndarray    # (B, n)
-    label_assign: jnp.ndarray # (B, n) exact stage per node
-    label_order: jnp.ndarray  # (B, n) gamma sequence
-
-    def tree_flatten(self):
-        return dataclasses.astuple(self), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-    @property
-    def batch(self) -> int:
-        return self.feats.shape[0]
-
-    @property
-    def n(self) -> int:
-        return self.feats.shape[1]
-
-
 @functools.lru_cache(maxsize=32)
-def _dp_label_fn(n: int, n_stages: int, system: PipelineSystem):
-    """Jitted vmapped exact-DP labeler for n-node graphs (identity order —
-    node indices are topological by CompGraph construction, exactly the
-    order :func:`repro.core.exact.exact_dp` segments by default)."""
-    order = jnp.arange(n, dtype=jnp.int32)
+def _dp_label_fn(bucket_n: int, n_stages: int, system: PipelineSystem):
+    """Jitted vmapped exact-DP labeler for one size bucket: graphs of any
+    ``n <= bucket_n`` solve together in ONE program (identity order — node
+    indices are topological by CompGraph construction, exactly the order
+    :func:`repro.core.exact.exact_dp` segments by default; padded trailing
+    slots are zero-cost, so the valid prefix matches the unpadded solve
+    bit-for-bit)."""
+    order = jnp.arange(bucket_n, dtype=jnp.int32)
 
-    def batched(fl, pb, ob, pmat):
-        def one(fl, pb, ob, pmat):
-            assign, obj = rho_dp_jax(
-                order, fl, pb, ob, pmat, n_stages, system)
-            return assign, obj
-
-        return jax.vmap(one)(fl, pb, ob, pmat)
+    def batched(fl, pb, ob, pmat, nv):
+        orders = jnp.broadcast_to(order, (fl.shape[0], bucket_n))
+        return rho_dp_batch(orders, fl, pb, ob, pmat, n_stages, system, nv)
 
     return jax.jit(batched)
 
@@ -117,15 +112,15 @@ def label_graphs(
 ) -> tuple[list[np.ndarray], list[np.ndarray]]:
     """Exact stage labels + imitation orders for a list of graphs.
 
-    ``label_method="dp"`` solves all cache-miss graphs of equal size in ONE
-    vmapped XLA program (:func:`repro.core.segment.rho_dp_jax` over the
-    identity topological order — the same contiguous-segmentation DP as
-    :func:`exact_dp`, lexicographic tie-break included, in f32), replacing
-    the former per-graph host loop.  ``"bb"`` keeps the branch-and-bound host solver
-    for arbitrary-DAG exactness.  With ``cache_dir`` each
-    graph's label is persisted as a tiny ``.npz`` keyed by content hash,
-    so re-labeling the same graphs (e.g. deterministic ``DagSampler``
-    epochs) never re-solves.
+    ``label_method="dp"`` solves all cache-miss graphs of one size *bucket*
+    (mixed sizes included — the DP is pad-aware) in ONE vmapped XLA program
+    (:func:`repro.core.segment.rho_dp_jax` over the identity topological
+    order — the same contiguous-segmentation DP as :func:`exact_dp`,
+    lexicographic tie-break included, in f32), replacing the former
+    per-graph host loop.  ``"bb"`` keeps the branch-and-bound host solver
+    for arbitrary-DAG exactness.  With ``cache_dir`` each graph's label is
+    persisted as a tiny ``.npz`` keyed by content hash, so re-labeling the
+    same graphs (e.g. deterministic ``DagSampler`` epochs) never re-solves.
     """
     system = system.with_stages(n_stages)
     la: list[np.ndarray | None] = [None] * len(graphs)
@@ -150,26 +145,29 @@ def label_graphs(
                                      time_budget_s=bb_budget_s)
                 la[i] = np.asarray(assign, dtype=np.int64)
         else:
-            by_n: dict[int, list[int]] = {}
+            by_bucket: dict[int, list[int]] = {}
             for i in misses:
-                by_n.setdefault(graphs[i].n, []).append(i)
-            for n, idxs in by_n.items():
-                fl = jnp.asarray(
-                    np.stack([graphs[i].flops for i in idxs]), jnp.float32)
-                pb = jnp.asarray(
-                    np.stack([graphs[i].param_bytes for i in idxs]),
-                    jnp.float32)
-                ob = jnp.asarray(
-                    np.stack([graphs[i].out_bytes for i in idxs]),
-                    jnp.float32)
-                pmat = jnp.asarray(
-                    np.stack([graphs[i].parent_matrix(max_deg)
-                              for i in idxs]))
-                assigns, _ = _dp_label_fn(n, n_stages, system)(
-                    fl, pb, ob, pmat)
+                by_bucket.setdefault(bucket_for(graphs[i].n), []).append(i)
+            for bucket_n, idxs in by_bucket.items():
+                B = len(idxs)
+                fl = np.zeros((B, bucket_n), np.float32)
+                pb = np.zeros((B, bucket_n), np.float32)
+                ob = np.zeros((B, bucket_n), np.float32)
+                pmat = np.full((B, bucket_n, max_deg), -1, np.int32)
+                nv = np.zeros(B, np.int32)
+                for row, i in enumerate(idxs):
+                    g = graphs[i]
+                    fl[row, : g.n] = g.flops
+                    pb[row, : g.n] = g.param_bytes
+                    ob[row, : g.n] = g.out_bytes
+                    pmat[row, : g.n] = g.parent_matrix(max_deg)
+                    nv[row] = g.n
+                assigns, _ = _dp_label_fn(bucket_n, n_stages, system)(
+                    jnp.asarray(fl), jnp.asarray(pb), jnp.asarray(ob),
+                    jnp.asarray(pmat), jnp.asarray(nv))
                 assigns = np.asarray(assigns, dtype=np.int64)
                 for row, i in enumerate(idxs):
-                    la[i] = assigns[row]
+                    la[i] = assigns[row, : graphs[i].n]
         if cache is not None:
             cache.mkdir(parents=True, exist_ok=True)
             for i in misses:
@@ -187,27 +185,27 @@ def pack_graphs(
     label_method: str = "dp",
     bb_budget_s: float = 0.25,
     cache_dir: str | Path | None = None,
-) -> GraphBatch:
-    """Embed + label a list of equally-sized graphs into one fixed-shape
-    pack.  Labeling runs through :func:`label_graphs` (vmapped exact DP by
-    default, optional on-disk cache)."""
+    bucket_n: int | None = None,
+    pad: bool = True,
+) -> PaddedGraphBatch:
+    """Embed + label a list of graphs (mixed sizes allowed) into one labeled
+    :class:`PaddedGraphBatch` — the SAME representation serving consumes.
+
+    Labeling runs through :func:`label_graphs` (vmapped pad-aware exact DP
+    by default, optional on-disk cache).  Nodes pad to ``bucket_n``
+    (default: the power-of-two bucket of the largest graph; ``pad=False``
+    packs exactly to the largest graph's size — the unpadded reference the
+    parity tests compare against).  Training only needs the decode-side
+    structures, so the O(n^2) ancestor closure / child matrix are skipped.
+    """
     la, lo = label_graphs(
         graphs, n_stages, system, max_deg=max_deg,
         label_method=label_method, bb_budget_s=bb_budget_s,
         cache_dir=cache_dir)
-    feats = [embed_graph(g, max_deg) for g in graphs]
-    pmat = [g.parent_matrix(max_deg) for g in graphs]
-    return GraphBatch(
-        feats=jnp.asarray(np.stack(feats)),
-        parent_mat=jnp.asarray(np.stack(pmat)),
-        flops=jnp.asarray(np.stack([g.flops for g in graphs]), jnp.float32),
-        param_bytes=jnp.asarray(
-            np.stack([g.param_bytes for g in graphs]), jnp.float32),
-        out_bytes=jnp.asarray(
-            np.stack([g.out_bytes for g in graphs]), jnp.float32),
-        label_assign=jnp.asarray(np.stack(la), jnp.int32),
-        label_order=jnp.asarray(np.stack(lo), jnp.int32),
-    )
+    if bucket_n is None and not pad:
+        bucket_n = max(g.n for g in graphs)
+    return pack_padded(graphs, bucket_n=bucket_n, max_deg=max_deg,
+                       decode_only=True, labels=(la, lo))
 
 
 # --------------------------------------------------------------------- #
@@ -217,7 +215,12 @@ def pack_graphs(
 # exactly like the host solver.
 # --------------------------------------------------------------------- #
 def cosine_reward(assign, label_assign, eps: float = 1e-8):
-    """Eq. 3: cosine similarity of stage vectors."""
+    """Eq. 3: cosine similarity of stage vectors.
+
+    Stage vectors are small integers, so every sum below is exact in f32
+    regardless of padding length or reduction order — padded stage vectors
+    (zeros past ``n_valid``) score bit-identically to unpadded ones.
+    """
     a = assign.astype(jnp.float32)
     b = label_assign.astype(jnp.float32)
     denom = jnp.maximum(jnp.linalg.norm(a) * jnp.linalg.norm(b), eps)
@@ -225,28 +228,86 @@ def cosine_reward(assign, label_assign, eps: float = 1e-8):
 
 
 # --------------------------------------------------------------------- #
-# training / eval steps
+# training / eval steps (all pad-aware)
 # --------------------------------------------------------------------- #
-def _policy_rewards(params, batch: GraphBatch, key, n_stages, system,
+def _policy_rewards(params, batch: PaddedGraphBatch, keys, n_stages, system,
                     mask_infeasible, sample: bool):
-    """vmapped decode + rho + reward. Returns (rewards, logp_sum, entropy)."""
+    """vmapped pad-aware decode + rho + reward over a labeled padded batch.
 
-    def one(feats, pmat, fl, pb, ob, label, k):
+    ``keys`` is a (B, 2) per-graph key array (split OUTSIDE so the sharded
+    step sees the same per-graph streams as the single-device step).
+    Returns per-graph (rewards, logp_sum, entropy_mean, orders, assigns);
+    padded node slots contribute zero logp/entropy and stage 0, inert
+    ``n_valid == 0`` rows score zero reward.
+    """
+
+    dense = batch.dense   # static: skip n_valid masking for equal-size packs
+
+    def one(feats, pmat, fl, pb, ob, label, nv, k):
+        nv_d = None if dense else nv
         if sample:
             order, logp, ent = ptrnet.sample_order(
-                params, feats, pmat, k, mask_infeasible)
+                params, feats, pmat, k, mask_infeasible, n_valid=nv_d)
         else:
             order, logp, ent = ptrnet.greedy_order(
-                params, feats, pmat, mask_infeasible)
-        assign, _ = rho_dp_jax(order, fl, pb, ob, pmat, n_stages, system)
+                params, feats, pmat, mask_infeasible, n_valid=nv_d)
+        assign, _ = rho_dp_jax(order, fl, pb, ob, pmat, n_stages, system,
+                               n_valid=nv_d)
+        if not dense:
+            valid = jnp.arange(assign.shape[0]) < nv
+            assign = jnp.where(valid, assign, 0)
         r = cosine_reward(assign, label)
-        return r, logp.sum(), ent.mean(), order, assign
+        # padded steps carry exactly zero logp/entropy; normalize entropy
+        # by the REAL step count so it matches the unpadded decode's mean.
+        ent_mean = ent.sum() / jnp.maximum(nv.astype(jnp.float32), 1.0)
+        return r, logp.sum(), ent_mean, order, assign
 
-    keys = jax.random.split(key, batch.batch)
     return jax.vmap(one)(
         batch.feats, batch.parent_mat, batch.flops, batch.param_bytes,
-        batch.out_bytes, batch.label_assign, keys,
+        batch.out_bytes, batch.label_assign, batch.n_valid, keys,
     )
+
+
+def make_rollout_fn(n_stages: int, system: PipelineSystem,
+                    mask_infeasible: bool = True, sample: bool = False):
+    """Jitted per-graph rollout: (params, batch, key) -> (rewards, logp,
+    entropy, orders, assigns), each leading-dim B.  The building block the
+    train/eval steps share; exposed for parity tests and benchmarks."""
+    system = system.with_stages(n_stages)
+
+    @jax.jit
+    def rollout(params, batch: PaddedGraphBatch, key):
+        keys = jax.random.split(key, batch.batch)
+        return _policy_rewards(params, batch, keys, n_stages, system,
+                               mask_infeasible, sample)
+
+    return rollout
+
+
+def _sum_loss_fn(params, baseline_params, batch, keys, n_stages, system,
+                 mask_infeasible, entropy_coef):
+    """Unnormalized (summed) REINFORCE loss + metric sums over one shard.
+
+    Returning sums (not means) is what makes the data-parallel step exact:
+    shards psum the sums and the valid-graph count, then normalize once
+    globally — identical to the single-device weighted mean.
+    """
+    r_s, logp, ent, _, _ = _policy_rewards(
+        params, batch, keys, n_stages, system, mask_infeasible, sample=True)
+    r_b, _, _, _, _ = _policy_rewards(
+        jax.lax.stop_gradient(baseline_params), batch, keys, n_stages,
+        system, mask_infeasible, sample=False)
+    adv = jax.lax.stop_gradient(r_s - r_b)
+    w = (batch.n_valid > 0).astype(jnp.float32)   # inert padding rows: 0
+    loss_sum = -jnp.sum(adv * logp * w) - entropy_coef * jnp.sum(ent * w)
+    sums = {
+        "reward_sample": jnp.sum(r_s * w),
+        "reward_baseline": jnp.sum(r_b * w),
+        "advantage": jnp.sum(adv * w),
+        "entropy": jnp.sum(ent * w),
+        "n_graphs": jnp.sum(w),
+    }
+    return loss_sum, sums
 
 
 def make_train_step(
@@ -255,58 +316,147 @@ def make_train_step(
     optimizer,
     mask_infeasible: bool = True,
     entropy_coef: float = 0.0,
+    mesh=None,
+    axis_name: str = "data",
 ):
     """Build the jitted REINFORCE step: (params, baseline_params, opt_state,
-    batch, key) -> (params, opt_state, metrics)."""
+    batch, key) -> (params, opt_state, metrics).
 
-    def loss_fn(params, baseline_params, batch, key):
-        r_s, logp, ent, _, _ = _policy_rewards(
-            params, batch, key, n_stages, system, mask_infeasible, sample=True)
-        r_b, _, _, _, _ = _policy_rewards(
-            jax.lax.stop_gradient(baseline_params), batch, key, n_stages,
-            system, mask_infeasible, sample=False)
-        adv = jax.lax.stop_gradient(r_s - r_b)
-        loss = -jnp.mean(adv * logp) - entropy_coef * jnp.mean(ent)
-        return loss, {
-            "reward_sample": jnp.mean(r_s),
-            "reward_baseline": jnp.mean(r_b),
-            "advantage": jnp.mean(adv),
-            "entropy": jnp.mean(ent),
-        }
+    The one jitted fn serves every (bucket_n, B) shape — mixed-size bucketed
+    streams recompile per shape and then hit the jit cache.  With ``mesh``
+    (a 1-axis data mesh, see :func:`repro.parallel.sharding
+    .data_parallel_mesh`) the loss/grad runs under ``shard_map`` over the
+    batch axis: each device rolls out its microbatch, gradient and metric
+    SUMS are psum-reduced, and the normalization/clip/Adam update happens
+    once on replicated values — the global batch must divide the mesh size.
+    """
+    system = system.with_stages(n_stages)
+    loss_args = (n_stages, system, mask_infeasible, entropy_coef)
+
+    def _finish(params, opt_state, loss_sum, sums, grads):
+        W = jnp.maximum(sums["n_graphs"], 1.0)
+        grads = jax.tree.map(lambda g: g / W, grads)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {k: v / W for k, v in sums.items() if k != "n_graphs"}
+        metrics.update(loss=loss_sum / W, grad_norm=gnorm,
+                       n_graphs=sums["n_graphs"])
+        return params, opt_state, metrics
+
+    if mesh is None:
+
+        @jax.jit
+        def train_step(params, baseline_params, opt_state, batch, key):
+            keys = jax.random.split(key, batch.batch)
+            (loss_sum, sums), grads = jax.value_and_grad(
+                _sum_loss_fn, has_aux=True)(
+                    params, baseline_params, batch, keys, *loss_args)
+            return _finish(params, opt_state, loss_sum, sums, grads)
+
+        return train_step
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    n_dev = mesh.shape[axis_name]
+
+    def sharded_grads(params, baseline_params, batch, keys):
+        (loss_sum, sums), grads = jax.value_and_grad(
+            _sum_loss_fn, has_aux=True)(
+                params, baseline_params, batch, keys, *loss_args)
+        loss_sum = jax.lax.psum(loss_sum, axis_name)
+        sums = jax.lax.psum(sums, axis_name)
+        grads = jax.lax.psum(grads, axis_name)
+        return loss_sum, sums, grads
 
     @jax.jit
     def train_step(params, baseline_params, opt_state, batch, key):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, baseline_params, batch, key)
-        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
-        params, opt_state = optimizer.update(grads, opt_state, params)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
-        return params, opt_state, metrics
+        if batch.batch % n_dev:
+            raise ValueError(
+                f"global batch {batch.batch} not divisible by "
+                f"{n_dev} devices on mesh axis {axis_name!r}")
+        keys = jax.random.split(key, batch.batch)
+        loss_sum, sums, grads = shard_map(
+            sharded_grads, mesh=mesh,
+            in_specs=(P(), P(), P(axis_name), P(axis_name)),
+            out_specs=(P(), P(), P()),
+            check_rep=False,
+        )(params, baseline_params, batch, keys)
+        return _finish(params, opt_state, loss_sum, sums, grads)
 
     return train_step
 
 
 def make_eval_fn(n_stages: int, system: PipelineSystem,
                  mask_infeasible: bool = True):
-    """Greedy-decode eval: mean reward + mean exact-match of stage vectors."""
+    """Greedy-decode eval over a labeled padded batch: valid-graph-weighted
+    mean reward + mean exact-match of the valid stage-vector prefix."""
+    system = system.with_stages(n_stages)
 
     @jax.jit
-    def eval_fn(params, batch: GraphBatch):
-        key = jax.random.PRNGKey(0)
-        r, _, _, orders, assigns = _policy_rewards(
-            params, batch, key, n_stages, system, mask_infeasible, sample=False)
-        exact_match = jnp.mean(
-            jnp.all(assigns == batch.label_assign, axis=-1).astype(jnp.float32))
-        return {"reward_greedy": jnp.mean(r), "exact_match": exact_match}
+    def eval_fn(params, batch: PaddedGraphBatch):
+        keys = jnp.zeros((batch.batch, 2), jnp.uint32)   # greedy: unused
+        r, _, _, _, assigns = _policy_rewards(
+            params, batch, keys, n_stages, system, mask_infeasible,
+            sample=False)
+        valid = batch.valid_mask()
+        match = jnp.all(
+            jnp.where(valid, assigns == batch.label_assign, True), axis=-1)
+        w = (batch.n_valid > 0).astype(jnp.float32)
+        W = jnp.maximum(jnp.sum(w), 1.0)
+        return {
+            "reward_greedy": jnp.sum(r * w) / W,
+            "exact_match": jnp.sum(match.astype(jnp.float32) * w) / W,
+        }
 
     return eval_fn
 
 
 # --------------------------------------------------------------------- #
-# high-level trainer
+# functional trainer state + high-level engine
 # --------------------------------------------------------------------- #
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    """Everything a training run needs to resume, as one pytree — params,
+    rollout-baseline params, optimizer state, step counter and the best
+    baseline reward seen — so :mod:`repro.checkpoint.manager` round-trips
+    the trainer exactly."""
+
+    params: Any
+    baseline_params: Any
+    opt_state: Any
+    step: jnp.ndarray                  # () int32
+    best_baseline_reward: jnp.ndarray  # () float32
+
+    def tree_flatten(self):
+        return (self.params, self.baseline_params, self.opt_state,
+                self.step, self.best_baseline_reward), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(key, feat_dim: int, hidden: int, optimizer) -> TrainState:
+    params = ptrnet.init_params(key, feat_dim, hidden)
+    return TrainState(
+        params=params,
+        baseline_params=jax.tree.map(jnp.copy, params),
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+        best_baseline_reward=jnp.full((), -jnp.inf, jnp.float32),
+    )
+
+
 class RLTrainer:
-    """Paper training setup: Adam @ 1e-4, batch 128, rollout baseline."""
+    """Paper training setup: Adam @ 1e-4, batch 128, rollout baseline.
+
+    A thin stateful shell over :class:`TrainState` + the jitted step fns.
+    ``n_devices`` > 1 builds a 1-axis data mesh and runs the step under
+    ``shard_map`` (pure data parallelism: per-device microbatches,
+    psum-reduced grads, replicated params).  ``save``/``restore`` go
+    through :class:`repro.checkpoint.manager.CheckpointManager`.
+    """
 
     def __init__(
         self,
@@ -318,37 +468,94 @@ class RLTrainer:
         mask_infeasible: bool = True,
         entropy_coef: float = 0.0,
         seed: int = 0,
+        n_devices: int | None = None,
     ):
         from .embedding import embed_dim
         self.n_stages = n_stages
         self.system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
         self.optimizer = optim.adamw(lr=lr)
+        self.hidden = hidden
         feat_dim = feat_dim or embed_dim()
-        key = jax.random.PRNGKey(seed)
-        self.params = ptrnet.init_params(key, feat_dim, hidden)
-        self.baseline_params = jax.tree.map(jnp.copy, self.params)
-        self.opt_state = self.optimizer.init(self.params)
+        self.mesh = None
+        if n_devices is not None and n_devices > 1:
+            from ..parallel.sharding import data_parallel_mesh
+            self.mesh = data_parallel_mesh(n_devices)
+        self.state = init_train_state(
+            jax.random.PRNGKey(seed), feat_dim, hidden, self.optimizer)
         self._train_step = make_train_step(
-            n_stages, self.system, self.optimizer, mask_infeasible, entropy_coef)
+            n_stages, self.system, self.optimizer, mask_infeasible,
+            entropy_coef, mesh=self.mesh)
         self._eval_fn = make_eval_fn(n_stages, self.system, mask_infeasible)
-        self._best_baseline_reward = -np.inf
-        self.step_count = 0
+        self._ckpt_managers: dict = {}
 
-    def train_step(self, batch: GraphBatch, key) -> dict:
-        self.params, self.opt_state, metrics = self._train_step(
-            self.params, self.baseline_params, self.opt_state, batch, key)
-        self.step_count += 1
+    # -- state views ---------------------------------------------------- #
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def baseline_params(self):
+        return self.state.baseline_params
+
+    @property
+    def opt_state(self):
+        return self.state.opt_state
+
+    @property
+    def step_count(self) -> int:
+        return int(self.state.step)
+
+    # -- training ------------------------------------------------------- #
+    def train_step(self, batch: PaddedGraphBatch, key) -> dict:
+        if not batch.has_labels:
+            raise ValueError("training batch carries no labels; pack with "
+                             "rl.pack_graphs / DagSampler.next_packed_batch")
+        params, opt_state, metrics = self._train_step(
+            self.state.params, self.state.baseline_params,
+            self.state.opt_state, batch, key)
+        self.state = dataclasses.replace(
+            self.state, params=params, opt_state=opt_state,
+            step=self.state.step + 1)
         return {k: float(v) for k, v in metrics.items()}
 
-    def evaluate(self, batch: GraphBatch) -> dict:
-        return {k: float(v) for k, v in self._eval_fn(self.params, batch).items()}
+    def evaluate(self, batch: PaddedGraphBatch) -> dict:
+        return {k: float(v)
+                for k, v in self._eval_fn(self.state.params, batch).items()}
 
-    def maybe_update_baseline(self, eval_batch: GraphBatch) -> bool:
+    def maybe_update_baseline(self, eval_batch: PaddedGraphBatch) -> bool:
         """Rollout-baseline refresh: adopt the online policy as baseline when
         its greedy reward beats the best seen so far."""
         r = self.evaluate(eval_batch)["reward_greedy"]
-        if r > self._best_baseline_reward:
-            self._best_baseline_reward = r
-            self.baseline_params = jax.tree.map(jnp.copy, self.params)
+        if r > float(self.state.best_baseline_reward):
+            self.state = dataclasses.replace(
+                self.state,
+                baseline_params=jax.tree.map(jnp.copy, self.state.params),
+                best_baseline_reward=jnp.float32(r))
             return True
         return False
+
+    # -- checkpointing -------------------------------------------------- #
+    def _manager(self, ckpt_dir: str | Path):
+        """ONE CheckpointManager per directory for the trainer's lifetime,
+        so async saves serialize (`save` waits on the in-flight write)
+        instead of racing a second manager over the same tmp dir."""
+        from ..checkpoint import CheckpointManager
+        key = str(Path(ckpt_dir))
+        if key not in self._ckpt_managers:
+            self._ckpt_managers[key] = CheckpointManager(ckpt_dir)
+        return self._ckpt_managers[key]
+
+    def save(self, ckpt_dir: str | Path, blocking: bool = True) -> None:
+        """Checkpoint the full TrainState via CheckpointManager (atomic,
+        retained, resumable)."""
+        self._manager(ckpt_dir).save(self.step_count, self.state,
+                                     blocking=blocking)
+
+    def restore(self, ckpt_dir: str | Path) -> int | None:
+        """Restore the newest complete checkpoint; returns its step (or
+        None when the directory holds none)."""
+        step, state = self._manager(ckpt_dir).restore_latest(self.state)
+        if step is None:
+            return None
+        self.state = state
+        return step

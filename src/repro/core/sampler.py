@@ -19,11 +19,14 @@ parameterized precisely as in the paper.
 
 from __future__ import annotations
 
+import queue
+import threading
+
 import numpy as np
 
 from .graph import CompGraph
 
-__all__ = ["sample_dag", "sample_batch", "DagSampler"]
+__all__ = ["sample_dag", "sample_batch", "DagSampler", "prefetch"]
 
 
 def sample_dag(
@@ -105,15 +108,32 @@ def sample_dag(
 
 
 def sample_batch(
-    rng: np.random.Generator, batch: int, n: int = 30, degs=(2, 3, 4, 5, 6)
+    rng: np.random.Generator, batch: int, n=30, degs=(2, 3, 4, 5, 6)
 ) -> list[CompGraph]:
-    """A batch with the paper's uniform mixture over deg(V) in {2..6}."""
-    return [sample_dag(rng, n=n, deg=int(rng.choice(degs))) for _ in range(batch)]
+    """A batch with the paper's uniform mixture over deg(V) in {2..6}.
+
+    ``n`` may be an int (equal sizes, the paper's |V| = 30 setup) or an
+    inclusive ``(lo, hi)`` range — each graph draws its own size, which is
+    the mixed-size generalization the padded training engine consumes.
+    """
+    return [sample_dag(rng, n=_draw_n(rng, n), deg=int(rng.choice(degs)))
+            for _ in range(batch)]
+
+
+def _draw_n(rng: np.random.Generator, n) -> int:
+    if isinstance(n, (tuple, list)):
+        lo, hi = int(n[0]), int(n[1])
+        return int(rng.integers(lo, hi + 1))
+    return int(n)
 
 
 class DagSampler:
     """Stateful sampler with a deterministic stream (seed + counter), so the
     synthetic training set is reproducible across restarts.
+
+    ``n`` is either an int or an inclusive ``(lo, hi)`` size range (the
+    mixed-size training distribution — paper trains |V| = 30; the padded
+    engine trains e.g. ``(10, 50)`` and transfers to larger real DNNs).
 
     ``label_cache_dir`` (optional) is forwarded to the batch labeler: the
     stream is deterministic, so a second epoch (or a restarted run) over
@@ -121,10 +141,10 @@ class DagSampler:
     instead of re-solving.
     """
 
-    def __init__(self, seed: int = 0, n: int = 30, degs=(2, 3, 4, 5, 6),
+    def __init__(self, seed: int = 0, n=30, degs=(2, 3, 4, 5, 6),
                  label_cache_dir=None):
         self.seed = seed
-        self.n = n
+        self.n = tuple(n) if isinstance(n, (tuple, list)) else n
         self.degs = tuple(degs)
         self.label_cache_dir = label_cache_dir
         self._count = 0
@@ -135,16 +155,97 @@ class DagSampler:
         return sample_batch(rng, batch, n=self.n, degs=self.degs)
 
     def next_packed_batch(self, batch: int, n_stages: int, system=None,
-                          max_deg: int = 6, label_method: str = "dp"):
-        """Sample + embed + exact-label one training batch (a
-        :class:`repro.core.rl.GraphBatch`), labels solved in one vmapped
-        XLA program and cached on disk when ``label_cache_dir`` is set."""
+                          max_deg: int = 6, label_method: str = "dp",
+                          pad: bool | str = "auto"):
+        """Sample + embed + exact-label one training batch (a labeled
+        :class:`repro.core.batching.PaddedGraphBatch` — the serving
+        representation), labels solved in one vmapped pad-aware XLA program
+        and cached on disk when ``label_cache_dir`` is set.
+
+        ``pad="auto"``: a fixed-size sampler packs exactly (a dense batch,
+        no padding overhead — shapes are constant anyway); a mixed-size
+        sampler pads nodes to the power-of-two bucket so shapes repeat."""
         from .costmodel import PipelineSystem
         from .rl import pack_graphs
         system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        if pad == "auto":
+            pad = isinstance(self.n, tuple)
         return pack_graphs(
             self.next_batch(batch), n_stages, system, max_deg=max_deg,
-            label_method=label_method, cache_dir=self.label_cache_dir)
+            label_method=label_method, cache_dir=self.label_cache_dir,
+            pad=pad)
+
+    # ------------------------------------------------------------------ #
+    # mixed-size curriculum stream
+    # ------------------------------------------------------------------ #
+    def packed_stream(self, batch: int, n_stages: int, system=None,
+                      max_deg: int = 6, label_method: str = "dp",
+                      epochs: int | None = None, batches_per_epoch: int = 64,
+                      curriculum: bool = False, bucket: bool = True,
+                      pad_batch_dim: bool = True, batch_divisor: int = 1):
+        """Iterator of labeled per-bucket padded packs — the training feed.
+
+        Each draw samples ``batch`` graphs from the (seed, counter) stream;
+        with ``bucket`` they group by power-of-two size bucket and yield one
+        fixed-shape pack per bucket; with ``pad_batch_dim`` the batch dim
+        pads to its own power-of-two bucket with inert ``n_valid = 0`` rows
+        (zero loss weight), so the (bucket_n, B) shape set is tiny and the
+        jitted train step compiles once per shape, not once per draw.
+        ``batch_divisor`` additionally rounds every pack's batch dim up to
+        a multiple (set it to the data-parallel device count so shard_map's
+        divisibility requirement always holds, whatever the bucket mix).
+        ``curriculum`` starts the size range at its lower end and widens
+        linearly to the full range over the first ``batches_per_epoch``
+        draws of the COUNTER (not of this call) — small graphs first, the
+        transfer recipe the paper's generalizability result rests on.
+        ``epochs=None`` streams forever.  Deterministic: every draw —
+        including the curriculum ramp — is a pure function of
+        (seed, counter), so restoring :meth:`state` mid-stream resumes the
+        exact sequence.
+
+        Wrap with :func:`prefetch` to overlap host-side sampling + labeling
+        with device steps.
+        """
+        from .batching import bucketize
+        from .costmodel import PipelineSystem
+        from .rl import pack_graphs
+        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        full_n = self.n
+        epoch = 0
+        while epochs is None or epoch < epochs:
+            for _ in range(batches_per_epoch):
+                n_spec = full_n
+                # the ramp depends on the COUNTER, so a restored sampler
+                # resumes the identical stream even mid-curriculum
+                if curriculum and isinstance(full_n, tuple) \
+                        and self._count < batches_per_epoch:
+                    lo, hi = full_n
+                    frac = (self._count + 1) / batches_per_epoch
+                    n_spec = (lo, lo + max(1, int((hi - lo) * frac)))
+                rng = np.random.default_rng((self.seed, self._count))
+                self._count += 1
+                graphs = sample_batch(rng, batch, n=n_spec, degs=self.degs)
+                if bucket:
+                    groups = bucketize(graphs).values()
+                else:
+                    groups = [list(range(len(graphs)))]
+                for idxs in groups:
+                    pack = pack_graphs(
+                        [graphs[i] for i in idxs], n_stages, system,
+                        max_deg=max_deg, label_method=label_method,
+                        cache_dir=self.label_cache_dir,
+                        # fixed-size draws pack exactly (dense, no pad
+                        # overhead); mixed draws pad to the size bucket
+                        pad=isinstance(n_spec, (tuple, list)))
+                    target = pack.batch
+                    if pad_batch_dim and pack.batch != len(graphs):
+                        target = 1 << (pack.batch - 1).bit_length()
+                    if target % batch_divisor:
+                        target += batch_divisor - target % batch_divisor
+                    if target != pack.batch:
+                        pack = pack.pad_batch(target)
+                    yield pack
+            epoch += 1
 
     def state(self) -> dict:
         return {"seed": self.seed, "count": self._count}
@@ -152,3 +253,46 @@ class DagSampler:
     def restore(self, state: dict) -> None:
         self.seed = int(state["seed"])
         self._count = int(state["count"])
+
+
+# --------------------------------------------------------------------- #
+# background host prefetch
+# --------------------------------------------------------------------- #
+class _Prefetcher:
+    """Pull from ``it`` on a daemon thread into a bounded queue, so host
+    sampling + exact labeling overlap the device's train step."""
+
+    _DONE = object()
+
+    def __init__(self, it, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+        self._err: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._pull, args=(it,), daemon=True)
+        self._thread.start()
+
+    def _pull(self, it):
+        try:
+            for item in it:
+                self._q.put(item)
+        except BaseException as e:   # re-raised on the consumer side
+            self._err = e
+        finally:
+            self._q.put(self._DONE)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._DONE:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def prefetch(it, depth: int = 2):
+    """Wrap any pack iterator with background host prefetch (depth packs
+    buffered ahead of the consumer)."""
+    return _Prefetcher(it, depth)

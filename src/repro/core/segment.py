@@ -35,10 +35,27 @@ from .costmodel import PipelineSystem
 
 __all__ = [
     "rho_dp_jax",
+    "rho_dp_batch",
     "dependency_repair_jax",
     "co_consumer_repair_jax",
     "repair_jax",
 ]
+
+
+def rho_dp_batch(orders, flops, param_bytes, out_bytes, parent_mat,
+                 n_stages: int, system, n_valid):
+    """vmapped pad-aware :func:`rho_dp_jax` over a padded batch.
+
+    All array args carry a leading batch dim (``orders`` is ``(B, n)`` etc.,
+    ``n_valid`` is ``(B,)``); one XLA program segments every graph in the
+    pack — the shared primitive under the vmapped DP labeler, the RL reward
+    and the fused serving path.
+    """
+    def one(o, fl, pb, ob, pm, nv):
+        return rho_dp_jax(o, fl, pb, ob, pm, n_stages, system, n_valid=nv)
+
+    return jax.vmap(one)(orders, flops, param_bytes, out_bytes, parent_mat,
+                         n_valid)
 
 
 def rho_dp_jax(

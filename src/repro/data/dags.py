@@ -3,7 +3,9 @@
 Generating exact labels (branch-and-bound per graph) costs ~5-50 ms, so the
 dataset is materialized once and cached as ``.npz``; the cache key encodes
 (seed, count, |V|, stages, solver).  Training then samples fixed-shape
-``GraphBatch`` packs from the cache.
+labeled :class:`repro.core.batching.PaddedGraphBatch` packs from the cache —
+the same pad-aware representation the serving engine and the mixed-size
+sampler stream use (nodes pad to the power-of-two bucket, ``n_valid`` = |V|).
 """
 
 from __future__ import annotations
@@ -96,20 +98,38 @@ class LabeledDagDataset:
 
     # ------------------------------------------------------------------ #
     def batch(self, step: int, batch_size: int):
-        """Deterministic fixed-shape batch (jnp) for a training step."""
+        """Deterministic fixed-shape labeled :class:`PaddedGraphBatch` for a
+        training step.  Nodes pad from |V| to the power-of-two bucket with
+        zeros (-1 for parents), so dataset batches share compiled train-step
+        shapes with the mixed-size sampler stream."""
         import jax.numpy as jnp
-        from ..core.rl import GraphBatch
+
+        from ..core.batching import PaddedGraphBatch, bucket_for
         if self._data is None:
             self.build()
         rng = np.random.default_rng((self.seed, step))
         idx = rng.integers(0, len(self._data["feats"]), size=batch_size)
         d = self._data
-        return GraphBatch(
-            feats=jnp.asarray(d["feats"][idx]),
-            parent_mat=jnp.asarray(d["parent_mat"][idx]),
-            flops=jnp.asarray(d["flops"][idx]),
-            param_bytes=jnp.asarray(d["param_bytes"][idx]),
-            out_bytes=jnp.asarray(d["out_bytes"][idx]),
-            label_assign=jnp.asarray(d["label_assign"][idx]),
-            label_order=jnp.asarray(d["label_order"][idx]),
+        n = d["feats"].shape[1]
+        bucket_n = bucket_for(n)
+        pad = [(0, 0), (0, bucket_n - n)]
+
+        def zpad(a, fill=0):
+            if bucket_n == n:
+                return a
+            return np.pad(a, pad + [(0, 0)] * (a.ndim - 2),
+                          constant_values=fill)
+
+        B = len(idx)
+        return PaddedGraphBatch(
+            feats=jnp.asarray(zpad(d["feats"][idx])),
+            parent_mat=jnp.asarray(zpad(d["parent_mat"][idx], fill=-1)),
+            child_mat=jnp.zeros((B, bucket_n, 0), jnp.int32),
+            ancestor_mat=jnp.zeros((B, 0, 0), bool),
+            flops=jnp.asarray(zpad(d["flops"][idx])),
+            param_bytes=jnp.asarray(zpad(d["param_bytes"][idx])),
+            out_bytes=jnp.asarray(zpad(d["out_bytes"][idx])),
+            n_valid=jnp.full((B,), n, jnp.int32),
+            label_assign=jnp.asarray(zpad(d["label_assign"][idx])),
+            label_order=jnp.asarray(zpad(d["label_order"][idx])),
         )

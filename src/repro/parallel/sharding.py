@@ -38,6 +38,8 @@ __all__ = [
     "sharding_for",
     "constrain",
     "tree_shardings",
+    "data_parallel_mesh",
+    "batch_sharding",
 ]
 
 # logical name -> mesh axis (or tuple of axes, or None)
@@ -173,6 +175,28 @@ def _current_mesh() -> Mesh | None:
         return None if mesh.empty else mesh
     except Exception:  # pragma: no cover
         return None
+
+
+def data_parallel_mesh(n_devices: int | None = None,
+                       axis_name: str = "data") -> Mesh:
+    """1-axis pure data-parallel mesh over the first ``n_devices`` devices
+    (default: all) — what the RL training engine shards its batch axis
+    over.  Kept as a function (never a module constant) so importing this
+    module cannot touch jax device state."""
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if n > len(devs):
+        raise ValueError(f"asked for {n} devices, have {len(devs)} "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N for host testing)")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
+
+
+def batch_sharding(mesh: Mesh, axis_name: str = "data") -> NamedSharding:
+    """Sharding that splits a leading batch dim over ``axis_name`` — used to
+    place host-packed batches before a sharded train step."""
+    return NamedSharding(mesh, P(axis_name))
 
 
 def tree_shardings(spec_tree, shape_tree, mesh: Mesh, rules=None):

@@ -1,4 +1,4 @@
-"""RL agent invariants + a short learning run."""
+"""RL agent invariants + a short learning run (pad-aware batch stack)."""
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +19,28 @@ def small_batch():
     return pack_graphs(graphs, 4, sys5, label_method="dp"), sys5, graphs
 
 
+def test_pack_graphs_is_padded_serving_batch(small_batch):
+    """Training packs ARE the serving representation: a PaddedGraphBatch
+    with labels, nodes padded to the power-of-two bucket."""
+    from repro.core.batching import PaddedGraphBatch
+    batch, _, graphs = small_batch
+    assert isinstance(batch, PaddedGraphBatch)
+    assert batch.has_labels
+    assert batch.bucket_n == 32          # 30-node graphs pad to 32
+    assert np.asarray(batch.n_valid).tolist() == [g.n for g in graphs]
+    # labels are zero past n_valid
+    la = np.asarray(batch.label_assign)
+    assert (la[:, 30:] == 0).all()
+
+
 def test_decode_emits_permutation(small_batch):
     batch, _, graphs = small_batch
     params = ptrnet.init_params(jax.random.PRNGKey(0), batch.feats.shape[-1], 32)
     order, logp, ent = ptrnet.greedy_order(
-        params, batch.feats[0], batch.parent_mat[0])
-    assert sorted(np.asarray(order).tolist()) == list(range(batch.n))
+        params, batch.feats[0], batch.parent_mat[0],
+        n_valid=batch.n_valid[0])
+    n = graphs[0].n
+    assert sorted(np.asarray(order)[:n].tolist()) == list(range(n))
     assert bool(jnp.all(jnp.isfinite(logp)))
 
 
@@ -50,8 +66,11 @@ def test_rho_jax_matches_numpy(small_batch):
     g = graphs[0]
     assign_np, obj_np = exact_dp(g, 4, sys5)
     order = jnp.asarray(order_from_assignment(assign_np))
-    a_jax, f_jax = rho_dp_jax(order, batch.flops[0], batch.param_bytes[0],
-                              batch.out_bytes[0], batch.parent_mat[0], 4, sys5)
+    a_jax, f_jax = rho_dp_jax(
+        order, jnp.asarray(g.flops, jnp.float32),
+        jnp.asarray(g.param_bytes, jnp.float32),
+        jnp.asarray(g.out_bytes, jnp.float32),
+        jnp.asarray(g.parent_matrix(6)), 4, sys5)
     assert float(f_jax) == pytest.approx(obj_np, rel=1e-5)
 
 
@@ -84,8 +103,39 @@ def test_scheduler_save_load_roundtrip(tmp_path):
     sched = RespectScheduler.init(seed=3, hidden=32)
     g = build_model_graph("ResNet50")
     res1 = sched.schedule(g, 4)
-    path = tmp_path / "agent.npz"
+    path = tmp_path / "agent"
     sched.save(path)
+    assert (path / "manifest.json").exists()    # manager format on disk
     sched2 = RespectScheduler.load(path)
     res2 = sched2.schedule(g, 4)
     assert np.array_equal(res1.assignment, res2.assignment)
+
+
+def test_scheduler_load_legacy_npz(tmp_path):
+    """Back-compat: the pre-refactor flat-npz checkpoint format (keystr
+    keys like ["enc"]["wx"]) still loads to identical behaviour."""
+    from repro.core import RespectScheduler
+    sched = RespectScheduler.init(seed=7, hidden=32)
+    g = sample_dag(np.random.default_rng(2), n=20, deg=3)
+    res1 = sched.schedule(g, 4, use_cache=False)
+    flat = {}
+    leaves, _ = jax.tree_util.tree_flatten_with_path(sched.params)
+    for kp, leaf in leaves:
+        flat[jax.tree_util.keystr(kp)] = np.asarray(leaf)
+    path = tmp_path / "legacy.npz"
+    np.savez(path, **flat)
+    sched2 = RespectScheduler.load(path)
+    res2 = sched2.schedule(g, 4, use_cache=False)
+    assert np.array_equal(res1.assignment, res2.assignment)
+
+
+def test_scheduler_order_routes_through_bucketed_decoder():
+    """`order()` shares the BucketedDecoder (and its compile cache) with
+    the serving path instead of a legacy per-size program."""
+    from repro.core import RespectScheduler
+    sched = RespectScheduler.init(seed=0, hidden=32)
+    g = sample_dag(np.random.default_rng(4), n=20, deg=3)
+    assert not sched._decoder.compiled_shapes
+    o = sched.order(g)
+    assert sorted(o.tolist()) == list(range(g.n))
+    assert sched._decoder.compiled_shapes   # decode program is bucket-cached
