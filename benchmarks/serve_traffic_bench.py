@@ -1,0 +1,226 @@
+"""Arrival-driven serving throughput: the async micro-batched
+``SchedulerService`` vs the naive one-graph-per-call loop.
+
+The paper's headline is *serving-time* value; PRs 1-3 made the batch
+engine fast, but real traffic arrives as single requests.  This bench
+replays an **open-loop Poisson arrival trace** (exponential
+inter-arrivals at a rate set relative to the measured naive capacity)
+drawn from a pool of mixed-size synthetic DAGs — plus the ten Table-I
+ImageNet graphs in full (non-smoke) mode — against two front ends:
+
+* **naive** — one blocking ``schedule(g, use_cache=False)`` call per
+  request, the way a thin RPC wrapper would serve: no batching, no
+  cache, the per-dispatch overhead paid on every request;
+* **service** — ``repro.serving.SchedulerService``: bounded queue,
+  adaptive micro-batcher (``max_batch`` / ``max_wait_ms``), single-flight
+  dedup and the content-hash schedule cache, all warmed via the same
+  trace before timing.
+
+Reported: sustained graphs/s for both paths, the service's p50/p99/mean
+request latency (submit -> future resolution, batching wait included),
+and hit/dedup/batch counters.  Every service result is verified
+bit-identical to a per-graph reference (``match_exact_service``), so the
+speedup is never bought with a different schedule.
+
+Writes ``BENCH_traffic.json`` (checked in; the nightly CI guard diffs
+``speedup_service_vs_naive`` and the exactness/finiteness flags against
+it — see ``scripts/check_bench_regression.py --traffic-fresh``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import RespectScheduler, all_model_graphs, sample_dag  # noqa: E402
+from repro.serving import SchedulerService  # noqa: E402
+
+from .common import emit  # noqa: E402
+
+N_STAGES = 4
+HIDDEN = 128          # container-scale deployment config (as batched bench)
+MAX_BATCH = 16
+MAX_WAIT_MS = 5.0
+RATE_MULT = 3.0       # offered load = RATE_MULT * measured naive capacity
+
+
+def _build_pool(smoke: bool, rng: np.random.Generator):
+    n_synth = 12 if smoke else 16
+    sizes = rng.integers(8, 41, size=n_synth)
+    degs = rng.integers(2, 5, size=n_synth)
+    pool = [sample_dag(rng, n=int(n), deg=int(d))
+            for n, d in zip(sizes, degs)]
+    n_models = 0
+    if not smoke:
+        models = list(all_model_graphs().values())
+        pool += models
+        n_models = len(models)
+    return pool, n_synth, n_models
+
+
+def _run_service_trace(sched, trace, arrivals, max_batch, max_wait_ms):
+    """Replay the Poisson trace open-loop; returns (makespan_s, stats,
+    results, per-request latencies in seconds)."""
+    sched.clear_cache()
+    svc = SchedulerService(sched, max_batch=max_batch,
+                           max_wait_ms=max_wait_ms, max_queue=4096)
+    n = len(trace)
+    done_t = [0.0] * n
+    lat = [0.0] * n
+    futs = [None] * n
+    try:
+        t0 = time.perf_counter()
+        for i, (g, t_arr) in enumerate(zip(trace, arrivals)):
+            now = time.perf_counter() - t0
+            if t_arr > now:
+                time.sleep(t_arr - now)
+            t_sub = time.perf_counter()
+
+            def _mark(f, i=i, t_sub=t_sub):
+                done_t[i] = time.perf_counter()
+                lat[i] = done_t[i] - t_sub
+
+            fut = svc.submit(g, N_STAGES)
+            fut.add_done_callback(_mark)
+            futs[i] = fut
+        results = [f.result(timeout=600) for f in futs]
+    finally:
+        svc.close()
+    # only after close(): Future.set_result wakes result() waiters BEFORE
+    # running done-callbacks, so done_t/lat for the last-finishing
+    # requests are guaranteed filled only once the worker is joined.
+    makespan = max(done_t) - t0
+    stats = svc.stats()
+    return makespan, stats, results, lat
+
+
+def run(smoke: bool = False, out_json: str | Path | None = None,
+        n_requests: int | None = None, check: bool = False,
+        rate_mult: float = RATE_MULT):
+    rng = np.random.default_rng(0)
+    pool, n_synth, n_models = _build_pool(smoke, rng)
+    n_requests = n_requests or (120 if smoke else 240)
+    trace = [pool[int(i)] for i in rng.integers(0, len(pool), n_requests)]
+    repeat = 2 if smoke else 3
+
+    sched = RespectScheduler.init(seed=0, hidden=HIDDEN, max_compiled=64)
+
+    # ---- warm every program both paths will touch ---------------------- #
+    for g in pool:                      # batch-of-1 programs (naive path)
+        sched.schedule(g, N_STAGES, use_cache=False)
+    _run_service_trace(sched, trace, np.zeros(n_requests),
+                       MAX_BATCH, MAX_WAIT_MS)   # service batch shapes
+
+    # ---- naive one-graph-per-call baseline ----------------------------- #
+    t_naive = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for g in trace:
+            sched.schedule(g, N_STAGES, use_cache=False)
+        t_naive = min(t_naive, time.perf_counter() - t0)
+    gps_naive = n_requests / t_naive
+
+    # ---- open-loop Poisson trace through the service ------------------- #
+    offered = rate_mult * gps_naive
+    arrivals = np.cumsum(rng.exponential(1.0 / offered, size=n_requests))
+    best = None
+    for _ in range(repeat):
+        makespan, stats, results, lat = _run_service_trace(
+            sched, trace, arrivals, MAX_BATCH, MAX_WAIT_MS)
+        if best is None or makespan < best[0]:
+            best = (makespan, stats, results, lat)
+    makespan, stats, results, lat = best
+    gps_service = n_requests / makespan
+
+    # ---- exactness: every service result == the per-graph reference ---- #
+    reference = {
+        g.content_hash(): r
+        for g, r in zip(pool, sched.schedule_many(
+            pool, N_STAGES, use_cache=False))
+    }
+    match = all(
+        np.array_equal(res.assignment, reference[g.content_hash()].assignment)
+        and np.array_equal(res["order"], reference[g.content_hash()]["order"])
+        for g, res in zip(trace, results))
+
+    lat_ms = np.asarray(lat) * 1e3
+    p50, p99 = (float(np.percentile(lat_ms, q)) for q in (50.0, 99.0))
+    mean_ms = float(lat_ms.mean())
+    latency_finite = bool(np.isfinite(lat_ms).all())
+    speedup = gps_service / gps_naive
+
+    emit("traffic/naive_one_per_call", t_naive / n_requests * 1e6,
+         f"graphs_per_sec={gps_naive:.1f}")
+    emit("traffic/service_poisson", makespan / n_requests * 1e6,
+         f"graphs_per_sec={gps_service:.1f};speedup={speedup:.2f}x;"
+         f"p50_ms={p50:.2f};p99_ms={p99:.2f};match_exact={match}")
+    emit("traffic/service_batching", stats.batches,
+         f"mean_flush={n_requests / max(stats.batches, 1):.1f};"
+         f"hits={stats.cache_hits};misses={stats.cache_misses};"
+         f"dedups={stats.dedup_hits}")
+
+    summary = {
+        "n_requests": n_requests,
+        "pool_synthetic": n_synth,
+        "pool_models": n_models,
+        "hidden": HIDDEN,
+        "n_stages": N_STAGES,
+        "max_batch": MAX_BATCH,
+        "max_wait_ms": MAX_WAIT_MS,
+        "rate_mult": rate_mult,
+        "offered_rate_gps": offered,
+        "gps_naive": gps_naive,
+        "gps_service": gps_service,
+        "speedup_service_vs_naive": speedup,
+        "p50_ms": p50,
+        "p99_ms": p99,
+        "mean_ms": mean_ms,
+        "service_cache_hits": stats.cache_hits,
+        "service_cache_misses": stats.cache_misses,
+        "service_dedup_hits": stats.dedup_hits,
+        "service_batches": stats.batches,
+        "service_failed": stats.failed,
+        "match_exact_service": bool(match),
+        "latency_finite": latency_finite,
+    }
+    if out_json is not None:
+        Path(out_json).write_text(json.dumps(summary, indent=1))
+        print(f"# wrote {out_json}")
+    if check:
+        ok = (match and latency_finite and stats.failed == 0)
+        print(f"# traffic check: match_exact={match} "
+              f"latency_finite={latency_finite} failed={stats.failed} "
+              f"-> {'OK' if ok else 'FAIL'}")
+        if not ok:
+            raise SystemExit(1)
+    return summary
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short synthetic-only trace (CI config; the "
+                         "checked-in BENCH_traffic.json baseline)")
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--rate-mult", type=float, default=RATE_MULT)
+    ap.add_argument("--out-json", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless service output is bit-identical "
+                         "to the per-graph path, latency percentiles are "
+                         "finite and no request failed")
+    args = ap.parse_args()
+    out = args.out_json or ("BENCH_traffic.json" if args.smoke else None)
+    run(smoke=args.smoke, out_json=out, n_requests=args.n_requests,
+        check=args.check, rate_mult=args.rate_mult)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,10 +46,19 @@ def main() -> int:
                          "the reward_improved/metrics_finite hard flags")
     ap.add_argument("--train-baseline", default=None,
                     help="checked-in BENCH_train.json baseline")
+    ap.add_argument("--traffic-fresh", default=None,
+                    help="fresh BENCH_traffic-schema json; guards the "
+                         "async serving speedup (speedup_service_vs_naive) "
+                         "against --traffic-baseline plus the "
+                         "match_exact_service / latency_finite hard flags")
+    ap.add_argument("--traffic-baseline", default=None,
+                    help="checked-in BENCH_traffic.json baseline")
     args = ap.parse_args()
     metrics = args.metric or ["speedup_traffic"]
-    if args.fresh is None and args.train_fresh is None:
-        ap.error("nothing to guard: pass FRESH BASELINE and/or --train-fresh")
+    if (args.fresh is None and args.train_fresh is None
+            and args.traffic_fresh is None):
+        ap.error("nothing to guard: pass FRESH BASELINE and/or "
+                 "--train-fresh and/or --traffic-fresh")
     if args.fresh is not None and args.baseline is None:
         ap.error("FRESH given without BASELINE")
 
@@ -87,14 +96,32 @@ def main() -> int:
                 print(f"[guard] FAIL {flag}: training smoke invariant "
                       f"broken ({args.train_fresh})")
                 failed = True
+    if args.traffic_fresh:
+        trf = json.loads(Path(args.traffic_fresh).read_text())
+        trb = (json.loads(Path(args.traffic_baseline).read_text())
+               if args.traffic_baseline else {})
+        guard_ratio(trf, trb, "speedup_service_vs_naive")
+        for flag in ("latency_finite",):
+            if trf.get(flag) is not True:
+                print(f"[guard] FAIL {flag}: traffic smoke invariant "
+                      f"broken ({args.traffic_fresh})")
+                failed = True
+        if trf.get("service_failed", 0) != 0:
+            print(f"[guard] FAIL service_failed: "
+                  f"{trf['service_failed']} requests errored "
+                  f"({args.traffic_fresh})")
+            failed = True
     # exact-match flags are hard invariants, not ratios.  The smoke flags
     # compare the two serving APIs (batch-of-1 vs batch-of-N programs);
-    # the serve summary carries the one vs the HOST reference pipeline.
+    # the serve summary carries the one vs the HOST reference pipeline;
+    # the traffic summary carries the async service vs the per-graph path.
     checks = {}
     if args.fresh is not None:
         checks[args.fresh] = ("match_exact_distinct", "match_exact_traffic")
     if args.serve_fresh:
         checks[args.serve_fresh] = ("match_fused_vs_host_pipeline",)
+    if args.traffic_fresh:
+        checks[args.traffic_fresh] = ("match_exact_service",)
     for path, flags in checks.items():
         data = json.loads(Path(path).read_text())
         for m in flags:

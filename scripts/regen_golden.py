@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Regenerate the Table-I golden schedule snapshot.
+
+    PYTHONPATH=src python scripts/regen_golden.py [--out tests/golden/dnn_schedules.json]
+
+Writes, for each of the ten Table-I ImageNet model graphs, the structure
+triple (|V|, deg(V), depth) plus a schedule snapshot — sha256 digests of
+the decoded order and the repaired assignment, and the evaluated
+bottleneck/latency — produced by a FIXED agent (``RespectScheduler.init``
+at the pinned seed/hidden below, deterministic across machines for a
+given jax version) on the default Edge-TPU pipeline system.
+
+``tests/test_dnn_golden.py`` diffs live schedules against this file, so
+a decode, cost-model, rho or repair change that shifts any real-model
+schedule fails loudly instead of drifting silently.  Run this script and
+commit the diff ONLY when such a shift is intended and reviewed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# the pinned golden configuration — bump deliberately, never implicitly
+SEED = 0
+HIDDEN = 64
+N_STAGES = 4
+
+
+def digest(arr) -> str:
+    import numpy as np
+    return hashlib.sha256(np.asarray(arr, dtype=np.int64).tobytes()).hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="tests/golden/dnn_schedules.json")
+    args = ap.parse_args()
+
+    from repro.core import (MODEL_SPECS, RespectScheduler, build_model_graph,
+                            evaluate_schedule)
+    from repro.core.costmodel import PipelineSystem
+
+    sched = RespectScheduler.init(seed=SEED, hidden=HIDDEN)
+    system = PipelineSystem(n_stages=N_STAGES)
+    graphs = {name: build_model_graph(name) for name in MODEL_SPECS}
+    results = sched.schedule_many(list(graphs.values()), N_STAGES, system,
+                                  use_cache=False)
+
+    models = {}
+    for (name, g), res in zip(graphs.items(), results):
+        ev = evaluate_schedule(g, res.assignment, system)
+        models[name] = {
+            "n": g.n,
+            "deg": g.max_in_degree,
+            "depth": g.depth,
+            "order_sha256": digest(res["order"]),
+            "assign_sha256": digest(res.assignment),
+            "bottleneck_s": ev.bottleneck_s,
+            "latency_s": ev.latency_s,
+        }
+        print(f"{name:20s} n={g.n:4d} assign={models[name]['assign_sha256'][:12]} "
+              f"bottleneck={ev.bottleneck_s:.6e}")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "meta": {"seed": SEED, "hidden": HIDDEN, "n_stages": N_STAGES,
+                 "system": "PipelineSystem(n_stages=4) defaults"},
+        "models": models,
+    }, indent=1) + "\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

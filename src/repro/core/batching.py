@@ -33,6 +33,7 @@ sizes re-uses the same compiled programs.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 
 import jax
@@ -248,29 +249,44 @@ def pack_padded(
 
 
 class _LRU:
-    """Tiny LRU keyed cache (compiled decode fns are the values)."""
+    """Tiny LRU keyed cache (compiled decode fns are the values).
+
+    Thread-safe: a lock guards every OrderedDict mutation so the decoder
+    can be shared between the serving worker and direct callers.  Two
+    threads racing to compile the same missing key both compile and the
+    second ``put`` replaces the first — wasted work, never corruption.
+    """
 
     def __init__(self, maxsize: int):
         self.maxsize = maxsize
         self._d: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
 
     def get(self, key):
-        if key not in self._d:
-            return None
-        self._d.move_to_end(key)
-        return self._d[key]
+        with self._lock:
+            if key not in self._d:
+                return None
+            self._d.move_to_end(key)
+            return self._d[key]
 
     def put(self, key, value):
-        self._d[key] = value
-        self._d.move_to_end(key)
-        while len(self._d) > self.maxsize:
-            self._d.popitem(last=False)
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.maxsize:
+                self._d.popitem(last=False)
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._d.keys())
 
     def __len__(self):
-        return len(self._d)
+        with self._lock:
+            return len(self._d)
 
     def __contains__(self, key):
-        return key in self._d
+        with self._lock:
+            return key in self._d
 
 
 class BucketedDecoder:
@@ -350,7 +366,7 @@ class BucketedDecoder:
 
     @property
     def compiled_shapes(self) -> list[tuple]:
-        return [k[1:] for k in self._fns._d.keys()]
+        return [k[1:] for k in self._fns.keys()]
 
     # ------------------------------------------------------------------ #
     def _packed_buckets(self, graphs: list[CompGraph],

@@ -23,6 +23,8 @@ concat merges (deg(V) = 4).
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 from .graph import CompGraph
@@ -111,7 +113,10 @@ def build_model_graph(name: str) -> CompGraph:
     pos_of: list[float] = []      # relative depth for attribute profiles
     chain_idx: list[int] = []     # chain position -> node index
 
-    rng = np.random.default_rng(abs(hash(name)) % 2**32)
+    # crc32, not hash(): str hash is PYTHONHASHSEED-randomized per process,
+    # which silently changed the attribute draw — and therefore every
+    # model's schedule — from run to run (caught by the golden tier).
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
     for p in range(depth):
         rel = p / max(depth - 1, 1)
         branch_parents: list[int] = []

@@ -31,6 +31,7 @@ by ``examples/train_respect.py`` ships with the benchmarks.
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from pathlib import Path
@@ -58,25 +59,32 @@ class ScheduleResult(dict):
 
 class RespectScheduler:
     def __init__(self, params, mask_infeasible: bool = True, max_deg: int = 6,
-                 cache_size: int = 1024, logits_impl: str | None = None):
+                 cache_size: int = 1024, logits_impl: str | None = None,
+                 max_compiled: int = 16):
         self.params = params
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
         self._decoder = BucketedDecoder(
             mask_infeasible=mask_infeasible, max_deg=max_deg,
-            logits_impl=logits_impl)
+            logits_impl=logits_impl, max_compiled=max_compiled)
         self._cache: OrderedDict = OrderedDict()   # content hash -> result
         self._cache_size = cache_size
+        # One lock guards the schedule cache AND the stat counters, so the
+        # scheduler can be hammered from many threads (the serving front
+        # end's worker plus direct callers).  Device compute runs OUTSIDE
+        # the lock; only the hit-scan and the fill hold it.
+        self._cache_lock = threading.Lock()
         self.cache_hits = 0
         self.cache_misses = 0
 
     # ------------------------------------------------------------------ #
     @classmethod
     def init(cls, seed: int = 0, hidden: int = 256, max_deg: int = 6,
-             mask_infeasible: bool = True) -> "RespectScheduler":
+             mask_infeasible: bool = True, **kw) -> "RespectScheduler":
         params = ptrnet.init_params(
             jax.random.PRNGKey(seed), embed_dim(max_deg), hidden)
-        return cls(params, mask_infeasible=mask_infeasible, max_deg=max_deg)
+        return cls(params, mask_infeasible=mask_infeasible, max_deg=max_deg,
+                   **kw)
 
     def save(self, path: str | Path) -> None:
         """Write the agent checkpoint in the repo-wide
@@ -141,9 +149,25 @@ class RespectScheduler:
         return (graph.content_hash(), n_stages, system)
 
     def clear_cache(self) -> None:
-        self._cache.clear()
-        self.cache_hits = 0
-        self.cache_misses = 0
+        """Empty the schedule cache and reset the stat counters.
+
+        Safe to call while other threads are mid-``schedule_many``: an
+        in-progress fill simply re-inserts its freshly computed entries
+        into the emptied cache (results are never lost, and the counters
+        restart from the clear point)."""
+        with self._cache_lock:
+            self._cache.clear()
+            self.cache_hits = 0
+            self.cache_misses = 0
+
+    def cache_stats(self) -> dict:
+        """Consistent snapshot of the cache counters (one lock hold)."""
+        with self._cache_lock:
+            return {
+                "hits": self.cache_hits,
+                "misses": self.cache_misses,
+                "size": len(self._cache),
+            }
 
     def _result_from(self, entry: dict, n_stages: int, model: str,
                      cache_hit: bool) -> ScheduleResult:
@@ -178,44 +202,68 @@ class RespectScheduler:
         results: list[ScheduleResult | None] = [None] * len(graphs)
         misses: list[int] = []
         seen: dict[tuple, list[int]] = {}   # key -> positions awaiting fill
-        for i, g in enumerate(graphs):
-            key = self._cache_key(g, n_stages, system) if use_cache else None
-            if use_cache and key in self._cache:
-                self._cache.move_to_end(key)
-                self.cache_hits += 1
-                results[i] = self._result_from(
-                    self._cache[key], n_stages, g.model_name, cache_hit=True)
-            elif use_cache and key in seen:
-                seen[key].append(i)         # duplicate within this batch
-            else:
-                if use_cache:
-                    seen[key] = [i]
-                misses.append(i)
+        # content hashing is pure per-graph work — keep it outside the lock
+        keys = ([self._cache_key(g, n_stages, system) for g in graphs]
+                if use_cache else [None] * len(graphs))
+        # cache entries are immutable once inserted (the cache owns them;
+        # results are always fresh copies), so the lock only needs to
+        # cover the dict operations — entry refs are snapshotted under
+        # the lock and the numpy copies happen outside it.
+        hit_fills: list[tuple[int, dict]] = []
+        with self._cache_lock:
+            for i in range(len(graphs)):
+                key = keys[i]
+                if use_cache and key in self._cache:
+                    self._cache.move_to_end(key)
+                    self.cache_hits += 1
+                    hit_fills.append((i, self._cache[key]))
+                elif use_cache and key in seen:
+                    seen[key].append(i)     # duplicate within this batch
+                else:
+                    if use_cache:
+                        seen[key] = [i]
+                    misses.append(i)
+        for i, entry in hit_fills:
+            results[i] = self._result_from(
+                entry, n_stages, graphs[i].model_name, cache_hit=True)
 
         t_fused = 0.0
         if misses:
-            self.cache_misses += len(misses)
+            # device compute runs UNLOCKED — concurrent callers missing on
+            # different graphs overlap here; two callers racing on the SAME
+            # graph both compute (deterministically identical) entries and
+            # the second insert below harmlessly replaces the first.
             td = time.perf_counter()
             fused = self._decoder.fused_schedules(
                 self.params, [graphs[i] for i in misses], n_stages, system)
             t_fused = time.perf_counter() - td
-            for i, (order, assignment) in zip(misses, fused):
-                g = graphs[i]
-                entry = {"assignment": assignment, "order": order}
-                results[i] = self._result_from(
-                    entry, n_stages, g.model_name, cache_hit=False)
+            entries = {i: {"assignment": assignment, "order": order}
+                       for i, (order, assignment) in zip(misses, fused)}
+            dup_fills: list[tuple[int, dict]] = []
+            with self._cache_lock:
                 if use_cache:
-                    key = self._cache_key(g, n_stages, system)
-                    # the cache OWNS entry's arrays; every result (miss,
-                    # in-batch duplicate, later hit) gets fresh copies.
-                    self._cache[key] = entry
-                    for j in seen.get(key, [])[1:]:
-                        self.cache_hits += 1
-                        results[j] = self._result_from(
-                            entry, n_stages, graphs[j].model_name,
-                            cache_hit=True)
-                    while len(self._cache) > self._cache_size:
-                        self._cache.popitem(last=False)
+                    # counters track cache LOOKUPS: hits + misses == the
+                    # number of cached-path requests.  use_cache=False
+                    # traffic (warmup, benchmarks) never consults the
+                    # cache, so it moves neither counter.
+                    self.cache_misses += len(misses)
+                    for i, entry in entries.items():
+                        # the cache OWNS entry's arrays; every result
+                        # (miss, in-batch duplicate, later hit) gets fresh
+                        # copies.  A clear_cache() racing with this fill
+                        # just means the entry lands in the emptied cache.
+                        self._cache[keys[i]] = entry
+                        for j in seen.get(keys[i], [])[1:]:
+                            self.cache_hits += 1
+                            dup_fills.append((j, entry))
+                        while len(self._cache) > self._cache_size:
+                            self._cache.popitem(last=False)
+            for i, entry in entries.items():
+                results[i] = self._result_from(
+                    entry, n_stages, graphs[i].model_name, cache_hit=False)
+            for j, entry in dup_fills:
+                results[j] = self._result_from(
+                    entry, n_stages, graphs[j].model_name, cache_hit=True)
 
         if return_timing:
             t_total = time.perf_counter() - t0

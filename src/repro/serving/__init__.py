@@ -1,0 +1,16 @@
+"""Traffic-serving front end for the RESPECT scheduling engine.
+
+Turns the batch engine (``RespectScheduler.schedule_many``) into an
+arrival-driven service: a bounded request queue with backpressure, an
+adaptive micro-batcher (``max_batch`` / ``max_wait_ms``), single-flight
+dedup of identical in-flight graphs, AOT warmup of expected bucket
+shapes, and rolling latency/hit-rate metrics.  See
+:mod:`repro.serving.service` for the architecture.
+"""
+
+from .metrics import LatencyWindow, ServiceStats  # noqa: F401
+from .service import (  # noqa: F401
+    SchedulerService,
+    ServiceClosedError,
+    ServiceOverloadedError,
+)

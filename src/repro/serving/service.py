@@ -1,0 +1,409 @@
+"""Asynchronous scheduler service: queue, micro-batcher, single-flight.
+
+``RespectScheduler.schedule_many`` is a *batch* engine — it is fast when
+someone hands it a pre-formed list of graphs.  Real serving traffic is a
+stream of single requests arriving at arbitrary times.  This module
+bridges the two with the classic inference-serving front end:
+
+* **bounded request queue with backpressure** — ``submit(graph,
+  n_stages)`` returns a ``concurrent.futures.Future`` immediately; when
+  the queue is full, ``submit`` blocks up to its ``timeout`` and then
+  raises :class:`ServiceOverloadedError`, so overload surfaces at the
+  edge instead of growing an unbounded backlog;
+* **adaptive micro-batcher** — a single worker thread coalesces queued
+  requests and flushes when ``max_batch`` is reached or ``max_wait_ms``
+  has elapsed since the batch opened, whichever is first.  Under a
+  trickle each request waits at most ``max_wait_ms`` beyond its own
+  compute; under a burst batches fill instantly and the backlog is
+  scooped without any added deadline wait — p99 stays bounded in both
+  regimes.  Requests inside one flush are grouped by ``(n_stages,
+  system)`` and handed to ``schedule_many``, which buckets them by size
+  and runs ONE fused XLA program per bucket;
+* **single-flight dedup** — an identical in-flight request (same content
+  hash, stages, system) attaches its future to the running computation
+  instead of re-queueing; heavy duplicate traffic costs one decode;
+* **AOT warmup** — :meth:`SchedulerService.warmup` precompiles the fused
+  programs for the bucket shapes production traffic is expected to hit,
+  so the first real request does not eat a multi-second XLA compile;
+* **metrics + graceful shutdown** — rolling p50/p99 latency, queue
+  depth, hit/dedup counters (:mod:`repro.serving.metrics`);
+  :meth:`SchedulerService.close` stops intake, drains every accepted
+  request and joins the worker, so no future is ever left pending.
+
+The worker thread is the ONLY place the wrapped scheduler runs on the
+hot path, and the scheduler's own cache is additionally lock-guarded
+(:mod:`repro.core.respect`), so direct calls alongside the service are
+safe too.  Output is bit-identical to calling ``schedule_many`` on the
+same graphs — the service only changes *when* work runs, never *what*
+runs (asserted by the concurrency tests and the traffic benchmark).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+from ..core.costmodel import PipelineSystem
+from ..core.graph import CompGraph
+from ..core.respect import RespectScheduler, ScheduleResult
+from .metrics import LatencyWindow, ServiceStats
+
+__all__ = [
+    "SchedulerService",
+    "ServiceClosedError",
+    "ServiceOverloadedError",
+]
+
+_SENTINEL = object()
+
+
+class ServiceClosedError(RuntimeError):
+    """submit() after close()."""
+
+
+class ServiceOverloadedError(RuntimeError):
+    """The bounded request queue stayed full past the submit timeout."""
+
+
+class _Request:
+    __slots__ = ("graph", "key", "n_stages", "system", "future",
+                 "t_submit", "waiters")
+
+    def __init__(self, graph: CompGraph, key: tuple, n_stages: int,
+                 system: PipelineSystem):
+        self.graph = graph
+        self.key = key
+        self.n_stages = n_stages
+        self.system = system
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+        # duplicate submissions that coalesced onto this computation:
+        # (future, t_submit) pairs, appended under the service lock.
+        self.waiters: list[tuple[Future, float]] = []
+
+
+def _copied_result(res: ScheduleResult) -> ScheduleResult:
+    """Fresh copy so coalesced waiters never share mutable arrays."""
+    out = ScheduleResult(res)
+    out["assignment"] = res["assignment"].copy()
+    out["order"] = res["order"].copy()
+    return out
+
+
+class SchedulerService:
+    """Arrival-driven front end over a :class:`RespectScheduler`.
+
+    Parameters
+    ----------
+    scheduler:      the batch engine to drive (owns params + caches).
+    max_batch:      flush a micro-batch at this many requests.
+    max_wait_ms:    flush an underfull micro-batch this long after it
+                    opened (the tail-latency bound for trickle traffic).
+    max_queue:      bounded queue depth; beyond it ``submit`` exerts
+                    backpressure.
+    dedup:          coalesce identical in-flight requests (single-flight).
+    max_waiters:    bound on duplicates coalesced onto ONE in-flight
+                    computation (default ``max_queue``) — a hot-key flood
+                    hits backpressure like any other traffic instead of
+                    growing an unbounded waiter list.
+    use_cache:      serve repeats from the scheduler's content-hash LRU.
+    latency_window: number of recent latency samples kept for p50/p99.
+    """
+
+    def __init__(self, scheduler: RespectScheduler, max_batch: int = 16,
+                 max_wait_ms: float = 2.0, max_queue: int = 256,
+                 dedup: bool = True, use_cache: bool = True,
+                 latency_window: int = 2048, max_waiters: int | None = None):
+        if max_batch < 1:
+            raise ValueError("max_batch >= 1")
+        if max_wait_ms < 0:
+            raise ValueError("max_wait_ms >= 0")
+        self._scheduler = scheduler
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.dedup = dedup
+        self.use_cache = use_cache
+        self._max_waiters = max_queue if max_waiters is None else max_waiters
+        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, _Request] = {}
+        self._latency = LatencyWindow(latency_window)
+        self._closed = False
+        self._putting = 0          # submitters currently blocked in put()
+        # counters (all mutated under self._lock)
+        self._requests = 0
+        self._completed = 0
+        self._failed = 0
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._dedup_hits = 0
+        self._batches = 0
+        self._flush_full = 0
+        self._flush_deadline = 0
+        self._flush_drain = 0
+        self._max_batch_observed = 0
+        self._worker = threading.Thread(
+            target=self._worker_loop, name="respect-serve", daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------------ #
+    # client API
+    # ------------------------------------------------------------------ #
+    def submit(self, graph: CompGraph, n_stages: int,
+               system: PipelineSystem | None = None,
+               timeout: float | None = None) -> Future:
+        """Enqueue one request; resolves to a :class:`ScheduleResult`.
+
+        Blocks up to ``timeout`` seconds when the queue is full
+        (``timeout=0`` never blocks); raises
+        :class:`ServiceOverloadedError` if no slot frees up and
+        :class:`ServiceClosedError` after :meth:`close`.
+        """
+        # normalize exactly like the scheduler, so the dedup key and the
+        # schedule-cache key agree and results stay bit-identical
+        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        key = (graph.content_hash(), n_stages, system)
+        req = _Request(graph, key, n_stages, system)
+        with self._lock:
+            if self._closed:
+                raise ServiceClosedError("service is closed")
+            self._requests += 1
+            if self.dedup and key in self._inflight:
+                holder = self._inflight[key]
+                if len(holder.waiters) >= self._max_waiters:
+                    # a hot-key flood must feel backpressure too, not
+                    # grow an unbounded waiter list off the bounded queue
+                    self._failed += 1
+                    err = ServiceOverloadedError(
+                        f"{len(holder.waiters)} duplicates already "
+                        f"coalesced on this in-flight graph")
+                    req.future.set_exception(err)
+                    raise err
+                holder.waiters.append((req.future, req.t_submit))
+                self._dedup_hits += 1
+                return req.future
+            if self.dedup:
+                self._inflight[key] = req
+            self._putting += 1
+        try:
+            self._queue.put(req, block=timeout != 0, timeout=timeout)
+        except queue.Full:
+            with self._lock:
+                self._putting -= 1
+                if self.dedup and self._inflight.get(key) is req:
+                    del self._inflight[key]
+                waiters = req.waiters
+                # waiters were provisionally classified dedup_hits; their
+                # coalesce target never ran, so reclassify them as failed
+                # to keep hits+misses+dedups+failed == requests exact.
+                self._dedup_hits -= len(waiters)
+                self._failed += 1 + len(waiters)
+            err = ServiceOverloadedError(
+                f"queue full ({self._queue.maxsize}) for {timeout}s")
+            req.future.set_exception(err)
+            for fut, _ in waiters:
+                # duplicates that coalesced onto a rejected request are
+                # rejected with it — they never held a queue slot.
+                fut.set_exception(err)
+            raise err from None
+        with self._lock:
+            self._putting -= 1
+        return req.future
+
+    def schedule(self, graph: CompGraph, n_stages: int,
+                 system: PipelineSystem | None = None,
+                 timeout: float | None = None) -> ScheduleResult:
+        """Synchronous convenience: ``submit(...).result()``."""
+        return self.submit(graph, n_stages, system, timeout=timeout).result()
+
+    def warmup(self, shapes, n_stages: int = 4,
+               system: PipelineSystem | None = None, deg: int = 3,
+               seed: int = 0) -> list[tuple]:
+        """AOT-precompile fused programs for expected bucket shapes.
+
+        ``shapes`` is an iterable whose entries are an int node count
+        ``n`` (batch of 1), an ``(n, batch)`` pair, or a ready
+        :class:`CompGraph`.  Synthetic stand-in DAGs (``sample_dag`` with
+        in-degree ``deg``) are padded to the same (bucket_n, bucket_b,
+        child_width, stages, system) program keys real traffic of that
+        shape compiles, so the first live request runs warm.  Returns the
+        decoder's compiled shape keys.
+        """
+        import numpy as np
+
+        from ..core.sampler import sample_dag
+        rng = np.random.default_rng(seed)
+        for spec in shapes:
+            if isinstance(spec, CompGraph):
+                gs = [spec]
+            else:
+                n, b = spec if isinstance(spec, tuple) else (spec, 1)
+                gs = [sample_dag(rng, n=max(int(n), 3), deg=deg)
+                      for _ in range(int(b))]
+            self._scheduler.schedule_many(
+                gs, n_stages, system, use_cache=False)
+        return self._scheduler._decoder.compiled_shapes
+
+    def stats(self) -> ServiceStats:
+        p50, p99 = self._latency.percentiles_ms((50.0, 99.0))
+        with self._lock:
+            return ServiceStats(
+                requests=self._requests,
+                completed=self._completed,
+                failed=self._failed,
+                cache_hits=self._cache_hits,
+                cache_misses=self._cache_misses,
+                dedup_hits=self._dedup_hits,
+                batches=self._batches,
+                flush_full=self._flush_full,
+                flush_deadline=self._flush_deadline,
+                flush_drain=self._flush_drain,
+                max_batch_observed=self._max_batch_observed,
+                queue_depth=self._queue.qsize(),
+                inflight_keys=len(self._inflight),
+                p50_ms=p50,
+                p99_ms=p99,
+                mean_ms=self._latency.mean_ms(),
+            )
+
+    def close(self, timeout: float | None = None) -> bool:
+        """Stop intake, drain every accepted request, join the worker.
+
+        Idempotent.  Returns True once the worker has fully drained and
+        exited — from then on every future ever handed out is resolved
+        (with a result or an exception).  With a ``timeout`` it may
+        return False: the drain is still running and pending futures
+        will resolve later."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+        if not already:
+            self._queue.put(_SENTINEL)   # blocks until the worker makes room
+        if self._worker.is_alive():
+            self._worker.join(timeout)
+        return not self._worker.is_alive()
+
+    def __enter__(self) -> "SchedulerService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------ #
+    # worker
+    # ------------------------------------------------------------------ #
+    def _worker_loop(self) -> None:
+        draining = False
+        while not draining:
+            try:
+                item = self._queue.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if item is _SENTINEL:
+                break
+            batch, reason, draining = self._collect(item)
+            self._flush(batch, reason)
+        # drain: requests accepted before close(), plus any racing put()
+        # that landed after the sentinel.
+        while True:
+            leftovers: list[_Request] = []
+            while True:
+                try:
+                    it = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if it is not _SENTINEL:
+                    leftovers.append(it)
+            for i in range(0, len(leftovers), self.max_batch):
+                self._flush(leftovers[i:i + self.max_batch], "drain")
+            with self._lock:
+                busy = self._putting
+            if not leftovers and busy == 0 and self._queue.empty():
+                return
+            time.sleep(1e-3)
+
+    def _collect(self, first: _Request):
+        """Fill a micro-batch: up to ``max_batch`` requests, waiting at
+        most ``max_wait_s`` past the moment the batch opened.  A backlog
+        already sitting in the queue is scooped with zero extra wait even
+        after the deadline, so bursts fill batches instantly."""
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            try:
+                item = self._queue.get(timeout=max(0.0, remaining))
+            except queue.Empty:
+                return batch, "deadline", False
+            if item is _SENTINEL:
+                return batch, "drain", True
+            batch.append(item)
+        return batch, "full", False
+
+    def _flush(self, batch: list[_Request], reason: str) -> None:
+        if not batch:
+            return
+        with self._lock:
+            self._batches += 1
+            self._max_batch_observed = max(self._max_batch_observed,
+                                           len(batch))
+            if reason == "full":
+                self._flush_full += 1
+            elif reason == "deadline":
+                self._flush_deadline += 1
+            else:
+                self._flush_drain += 1
+        # one schedule_many per (stages, system) group; size bucketing
+        # happens inside the engine.
+        groups: dict[tuple, list[_Request]] = {}
+        for r in batch:
+            groups.setdefault((r.n_stages, r.system), []).append(r)
+        for (n_stages, system), reqs in groups.items():
+            try:
+                results = self._scheduler.schedule_many(
+                    [r.graph for r in reqs], n_stages, system,
+                    use_cache=self.use_cache)
+            except Exception as exc:
+                self._resolve_error(reqs, exc)
+                continue
+            self._resolve(reqs, results)
+
+    def _detach(self, req: _Request) -> list[tuple[Future, float]]:
+        """Remove ``req`` from the in-flight map and freeze its waiters.
+        After this, new identical submissions queue normally (and hit the
+        schedule cache, which was filled before we got here)."""
+        if self._inflight.get(req.key) is req:
+            del self._inflight[req.key]
+        return req.waiters
+
+    def _resolve(self, reqs: list[_Request],
+                 results: list[ScheduleResult]) -> None:
+        t_done = time.perf_counter()
+        for req, res in zip(reqs, results):
+            with self._lock:
+                waiters = self._detach(req)
+                self._completed += 1 + len(waiters)
+                if res["cache_hit"]:
+                    self._cache_hits += 1
+                else:
+                    self._cache_misses += 1
+            self._latency.add(t_done - req.t_submit)
+            req.future.set_result(res)
+            for fut, t_sub in waiters:
+                self._latency.add(t_done - t_sub)
+                fut.set_result(_copied_result(res))
+
+    def _resolve_error(self, reqs: list[_Request], exc: Exception) -> None:
+        for req in reqs:
+            with self._lock:
+                waiters = self._detach(req)
+                # retract the provisional dedup classification (see the
+                # overload path in submit): a waiter whose computation
+                # errored terminates as failed, not as a served dedup.
+                self._dedup_hits -= len(waiters)
+                self._failed += 1 + len(waiters)
+            req.future.set_exception(exc)
+            for fut, _ in waiters:
+                fut.set_exception(exc)

@@ -48,6 +48,35 @@ def sampled_from(seq):
     return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
 
 
+def lists(elements, min_size=0, max_size=None, unique=False):
+    if max_size is None:
+        max_size = min_size + 10
+
+    def draw_list(rng):
+        k = int(rng.integers(min_size, max_size + 1))
+        out: list = []
+        tries = 0
+        while len(out) < k and tries < 100 * (k + 1):
+            v = elements.draw(rng)
+            tries += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        if len(out) < min_size:
+            # mirror real hypothesis, which errors when it cannot satisfy
+            # uniqueness — never silently hand back a too-short list
+            raise ValueError(
+                f"lists(unique=True): could not draw {min_size} unique "
+                f"elements (got {len(out)}); element domain too small")
+        return out
+
+    return _Strategy(draw_list)
+
+
+def tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
 def composite(fn):
     def make(*args, **kwargs):
         def draw_value(rng):
@@ -97,7 +126,7 @@ def install() -> None:
     mod.__doc__ = __doc__
     st_mod = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "booleans", "floats", "sampled_from",
-                 "composite"):
+                 "lists", "tuples", "composite"):
         setattr(st_mod, name, globals()[name])
     mod.given = given
     mod.settings = settings

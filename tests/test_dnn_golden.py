@@ -1,0 +1,81 @@
+"""Golden regression tests for the ten Table-I ImageNet model graphs.
+
+Two layers of pinning:
+
+* **structure** — |V|, max in-degree and depth of every builder output
+  must equal the paper's Table I (and the checked-in snapshot), so a
+  builder change cannot silently reshape the evaluation graphs;
+* **schedules** — the decoded order and repaired assignment of a FIXED
+  seeded agent on each model are pinned by sha256 digest, along with the
+  evaluated bottleneck/latency.  Any change to the embedding, decode,
+  cost model, rho DP, or repair that shifts a real-model schedule fails
+  here loudly.  Intended shifts are re-pinned with
+  ``PYTHONPATH=src python scripts/regen_golden.py`` and reviewed as a
+  diff of ``tests/golden/dnn_schedules.json``.
+
+The digests cover all-integer arrays, so equality is exact; the float
+bottleneck/latency are re-derived from the integer assignment and
+compared tightly.
+"""
+
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (MODEL_SPECS, RespectScheduler, build_model_graph,
+                        evaluate_schedule, validate_monotone)
+from repro.core.costmodel import PipelineSystem
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "dnn_schedules.json"
+GOLDEN = json.loads(GOLDEN_PATH.read_text())
+
+
+def _digest(arr) -> str:
+    return hashlib.sha256(
+        np.asarray(arr, dtype=np.int64).tobytes()).hexdigest()
+
+
+@pytest.fixture(scope="module")
+def golden_results():
+    """Schedule all ten models once, with the pinned agent/system."""
+    meta = GOLDEN["meta"]
+    sched = RespectScheduler.init(seed=meta["seed"], hidden=meta["hidden"])
+    system = PipelineSystem(n_stages=meta["n_stages"])
+    graphs = {name: build_model_graph(name) for name in GOLDEN["models"]}
+    results = sched.schedule_many(
+        list(graphs.values()), meta["n_stages"], system, use_cache=False)
+    return meta, graphs, dict(zip(graphs, results))
+
+
+def test_golden_file_covers_all_table1_models():
+    assert set(GOLDEN["models"]) == set(MODEL_SPECS)
+
+
+@pytest.mark.parametrize("name", sorted(MODEL_SPECS))
+def test_structure_matches_table1_and_snapshot(name):
+    v, deg, depth, *_ = MODEL_SPECS[name]
+    g = build_model_graph(name)
+    assert (g.n, g.max_in_degree, g.depth) == (v, deg, depth)
+    snap = GOLDEN["models"][name]
+    assert (snap["n"], snap["deg"], snap["depth"]) == (v, deg, depth)
+
+
+@pytest.mark.parametrize("name", sorted(MODEL_SPECS))
+def test_schedule_snapshot_pinned(name, golden_results):
+    meta, graphs, results = golden_results
+    g, res = graphs[name], results[name]
+    snap = GOLDEN["models"][name]
+    assert validate_monotone(g, res.assignment, meta["n_stages"])
+    assert _digest(res["order"]) == snap["order_sha256"], (
+        f"{name}: decoded order shifted — if intended, re-pin with "
+        "scripts/regen_golden.py")
+    assert _digest(res.assignment) == snap["assign_sha256"], (
+        f"{name}: repaired assignment shifted — if intended, re-pin with "
+        "scripts/regen_golden.py")
+    ev = evaluate_schedule(
+        g, res.assignment, PipelineSystem(n_stages=meta["n_stages"]))
+    assert ev.bottleneck_s == pytest.approx(snap["bottleneck_s"], rel=1e-9)
+    assert ev.latency_s == pytest.approx(snap["latency_s"], rel=1e-9)

@@ -1,0 +1,151 @@
+"""Invariant sweeps over seeded random-DAG corpora.
+
+Property tier for the three contracts every scheduling-path change must
+preserve, swept over a corpus of random graphs rather than hand-picked
+instances:
+
+* **repair is a fixed point** — one ``repair`` pass from ANY starting
+  assignment lands on a valid schedule that a second pass leaves
+  untouched (the deployment mapping is idempotent, so re-repairing a
+  deployed schedule can never shift it);
+* **rho tie-break stability** — the host segmentation (``rho`` /
+  ``exact_dp``) and the device DP (``segment.rho_dp_jax``) pick the SAME
+  assignment, including on tie-heavy cost surfaces (uniform per-node
+  costs make most split points bottleneck-tied, so this pins the
+  lexicographic (bottleneck, latency) tie-break on both sides), and
+  repeated evaluation is bit-stable;
+* **pad-invariance of decode** — the greedy pointer decode of a graph
+  padded to any bucket equals the unpadded decode on the valid prefix,
+  with exactly zero log-prob/entropy contributed by pad steps.
+
+Runs under real ``hypothesis`` when installed, and under the seeded
+deterministic stub (``tests/_hypothesis_stub.py``) offline — the
+strategies used here (``integers``, ``booleans``, ``lists``,
+``composite``) are supported by both.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompGraph, ptrnet, repair, rho, sample_dag, validate_monotone
+from repro.core.batching import bucket_for
+from repro.core.costmodel import PipelineSystem
+from repro.core.embedding import embed_dim, embed_graph
+from repro.core.segment import rho_dp_jax
+
+MAX_DEG = 6
+
+# one fixed agent for the decode sweep: the property is about PADDING,
+# not about any particular weights
+_PARAMS = ptrnet.init_params(jax.random.PRNGKey(0), embed_dim(MAX_DEG), 32)
+
+
+def _uniform_costs(g: CompGraph) -> CompGraph:
+    """Flatten the cost surface so most segmentations tie on the
+    bottleneck — the adversarial case for tie-break stability."""
+    n = g.n
+    return dataclasses.replace(
+        g,
+        flops=np.full(n, 1.0e9),
+        param_bytes=np.full(n, 1.0e6),
+        out_bytes=np.full(n, 1.0e5),
+    )
+
+
+def _random_topo_order(g: CompGraph, rng: np.random.Generator) -> np.ndarray:
+    indeg = np.array([len(p) for p in g.parents])
+    children = g.children
+    ready = [i for i in range(g.n) if indeg[i] == 0]
+    order = []
+    while ready:
+        v = ready.pop(int(rng.integers(0, len(ready))))
+        order.append(v)
+        for c in children[v]:
+            indeg[c] -= 1
+            if indeg[c] == 0:
+                ready.append(c)
+    assert len(order) == g.n
+    return np.asarray(order, dtype=np.int64)
+
+
+@st.composite
+def dag_cases(draw, min_n=6, max_n=20):
+    """(graph, n_stages, seed) with a ~50% tie-heavy cost surface."""
+    n = draw(st.integers(min_n, max_n))
+    deg = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 10_000))
+    n_stages = draw(st.integers(2, 6))
+    g = sample_dag(np.random.default_rng(seed), n=n, deg=deg)
+    if draw(st.booleans()):
+        g = _uniform_costs(g)
+    return g, n_stages, seed
+
+
+# --------------------------------------------------------------------- #
+# repair: fixed-point idempotence from arbitrary starting assignments
+# --------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(dag_cases(), st.lists(st.integers(0, 5), min_size=20, max_size=20))
+def test_repair_is_idempotent_fixed_point(case, raw_assign):
+    g, n_stages, _ = case
+    # arbitrary (usually invalid) starting assignment, clipped to range
+    start = np.asarray(raw_assign[: g.n] + [0] * max(0, g.n - len(raw_assign)),
+                       dtype=np.int64) % n_stages
+    r1 = repair(g, start, n_stages)
+    assert validate_monotone(g, r1, n_stages)
+    r2 = repair(g, r1, n_stages)
+    assert np.array_equal(r1, r2), "repair moved an already-repaired schedule"
+
+
+# --------------------------------------------------------------------- #
+# rho: host/device agreement + bit-stability on tie-heavy costs
+# --------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(dag_cases(max_n=16))
+def test_rho_tie_break_stable_host_vs_device(case):
+    g, n_stages, seed = case
+    system = PipelineSystem(n_stages)
+    order = _random_topo_order(g, np.random.default_rng(seed + 1))
+
+    host1 = rho(g, order, n_stages, system)
+    host2 = rho(g, order, n_stages, system)
+    assert np.array_equal(host1, host2), "host rho is not deterministic"
+    assert validate_monotone(g, host1, n_stages)
+
+    dev, _ = rho_dp_jax(
+        jnp.asarray(order), jnp.asarray(g.flops, jnp.float32),
+        jnp.asarray(g.param_bytes, jnp.float32),
+        jnp.asarray(g.out_bytes, jnp.float32),
+        jnp.asarray(g.parent_matrix(MAX_DEG)), n_stages, system)
+    assert np.array_equal(host1, np.asarray(dev)), (
+        "device DP broke a tie differently from the host solver")
+
+
+# --------------------------------------------------------------------- #
+# decode: pad-invariance at every bucket size
+# --------------------------------------------------------------------- #
+@settings(max_examples=12, deadline=None)
+@given(dag_cases(max_n=18), st.booleans())
+def test_greedy_decode_pad_invariant(case, double_bucket):
+    g, _, _ = case
+    feats = jnp.asarray(embed_graph(g, MAX_DEG))
+    pmat = jnp.asarray(g.parent_matrix(MAX_DEG))
+    o_ref, lp_ref, ent_ref = ptrnet.greedy_order(_PARAMS, feats, pmat)
+
+    pad_n = bucket_for(g.n) * (2 if double_bucket else 1)
+    pf = jnp.zeros((pad_n, feats.shape[1]), feats.dtype).at[: g.n].set(feats)
+    pp = jnp.full((pad_n, MAX_DEG), -1, jnp.int32).at[: g.n].set(pmat)
+    o_pad, lp_pad, ent_pad = ptrnet.greedy_order(
+        _PARAMS, pf, pp, n_valid=g.n)
+
+    prefix = np.asarray(o_pad)[: g.n]
+    assert np.array_equal(np.asarray(o_ref), prefix)
+    assert sorted(prefix.tolist()) == list(range(g.n))
+    np.testing.assert_allclose(np.asarray(lp_ref),
+                               np.asarray(lp_pad)[: g.n], atol=1e-6)
+    assert float(jnp.abs(lp_pad[g.n:]).sum()) == 0.0
+    assert float(jnp.abs(ent_pad[g.n:]).sum()) == 0.0
