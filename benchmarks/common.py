@@ -1,4 +1,10 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers.
+
+Graph-pool construction lives in :mod:`repro.eval.scenarios` (the eval
+grid's single source of truth); the wrappers here exist so every bench
+— gap-to-optimal, serving traffic, Table-I stats — scores the SAME
+pools instead of each keeping a private copy-pasted sampler.
+"""
 
 from __future__ import annotations
 
@@ -6,6 +12,20 @@ import time
 from pathlib import Path
 
 import numpy as np
+
+
+def table1_pool() -> dict:
+    """name -> CompGraph for the ten Table-I DNN models."""
+    from repro.core import all_model_graphs
+    return all_model_graphs()
+
+
+def traffic_pool(smoke: bool, rng: np.random.Generator):
+    """(pool, n_synthetic, n_models): the serving-bench request pool —
+    the same graphs the eval grid's ``traffic`` scenario scores for
+    gap-to-optimal."""
+    from repro.eval.scenarios import traffic_pool as _pool
+    return _pool(smoke, rng)
 
 
 def timeit(fn, *args, repeat: int = 5, warmup: int = 1, **kw) -> float:

@@ -1,0 +1,73 @@
+"""Gap-to-optimal scenario grid: RESPECT / heuristics vs the exact oracle.
+
+Sweeps the :mod:`repro.eval` scenario grid — synthetic families
+(chain/layered/branchy, |V| ~= 5-30) × stage counts (2-8) × the ten
+Table-I DNN graphs × the shared serving-traffic pool — scoring the RL
+policy, the compiler emulation and list scheduling against the batched
+device-side exact oracle (host-parity-checked per scenario, bb-refined
+to the true monotone optimum on small graphs).
+
+Writes ``BENCH_eval.json`` (checked in; ``scripts/check_bench_regression.py
+--eval-fresh/--eval-baseline`` guards the match-rate/gap tables against it
+and hard-fails on oracle-parity or schedule-validity loss — see the
+``eval-smoke`` CI job).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.eval import (check_results, emit_lines, run_grid,  # noqa: E402
+                        scenario_grid, write_report)
+
+from .common import emit, load_agent  # noqa: E402
+
+BB_MAX_N = 12          # bb-refine the optimum on graphs up to this size
+BB_BUDGET_S = 2.0
+
+
+def run(smoke: bool = False, out_json: str | Path | None = None,
+        check: bool = False):
+    sched, trained = load_agent()
+    scenarios = scenario_grid(smoke=smoke)
+    results = run_grid(scenarios, sched, bb_max_n=BB_MAX_N,
+                       bb_budget_s=BB_BUDGET_S)
+    emit_lines(results, emit)
+    summary = None
+    meta = {"smoke": smoke, "trained_agent": trained,
+            "bb_max_n": BB_MAX_N,
+            "n_scenarios": len(scenarios)}
+    if out_json is not None:
+        summary = write_report(results, out_json, meta)
+        print(f"# wrote {out_json}")
+    problems = check_results(results)
+    if check:
+        for p in problems:
+            print(f"# eval check FAIL: {p}")
+        print(f"# eval check: {'OK' if not problems else 'FAIL'}")
+        if problems:
+            raise SystemExit(1)
+    return summary if summary is not None else results
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid (CI config; the checked-in "
+                         "BENCH_eval.json baseline)")
+    ap.add_argument("--out-json", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on oracle-parity loss, an invalid scored "
+                         "schedule, or a schedule below the refined optimum")
+    args = ap.parse_args()
+    out = args.out_json or ("BENCH_eval.json" if args.smoke else None)
+    run(smoke=args.smoke, out_json=out, check=args.check)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,38 +5,38 @@ Per model and stage count, compare RESPECT's per-stage parameter placement
 is the mean absolute difference in per-stage peak parameter bytes, as a
 percentage of the optimal placement (paper reports 2.26% / 2.74% / 6.31%
 averages for 4/5/6 stages).
+
+Thin shell over the :mod:`repro.eval` runner: the Table-I scenarios are
+scored once through the gap-to-optimal engine (batched device oracle,
+parity-checked) and this module only formats the per-model records, so
+Fig. 5 and ``BENCH_eval.json`` can never drift apart.
 """
 
 import numpy as np
 
-from repro.core import (EDGETPU, MODEL_SPECS, build_model_graph,
-                        evaluate_schedule, exact_dp)
+from repro.eval import ExactOracle, run_scenario, table1_scenarios
 
 from .common import emit, load_agent
 
 
 def run():
     sched, trained = load_agent()
+    oracle = ExactOracle()
     lines = []
-    for k in (4, 5, 6):
-        sys_ = EDGETPU.with_stages(k)
+    for sc in table1_scenarios(stage_counts=(4, 5, 6)):
+        rec = run_scenario(sc, sched, oracle, keep_graph_records=True)
+        k = sc.n_stages
         gaps = []
-        for name in MODEL_SPECS:
-            g = build_model_graph(name)
-            a_e, _ = exact_dp(g, k, sys_)
-            ev_e = evaluate_schedule(g, a_e, sys_)
-            res = sched.schedule(g, k, sys_)
-            ev_r = evaluate_schedule(g, res.assignment, sys_)
-            denom = max(float(ev_e.stage_params.max()), 1.0)
-            gap = float(np.mean(np.abs(ev_r.stage_params
-                                       - ev_e.stage_params))) / denom
+        for g in rec["graphs"]:
+            gap = g["respect_param_gap_pct"]
             gaps.append(gap)
             lines.append(emit(
-                f"fig5/{name}/k{k}", 0.0,
-                f"gap_pct={gap*100:.2f};"
-                f"on_cache_rl_MiB={ev_r.on_cache_bytes.sum()/2**20:.1f};"
-                f"on_cache_exact_MiB={ev_e.on_cache_bytes.sum()/2**20:.1f}"))
+                f"fig5/{g['model']}/k{k}", 0.0,
+                f"gap_pct={gap:.2f};"
+                f"bottleneck_gap={g['respect_gap']:.4f};"
+                f"match={g['respect_match']}"))
         lines.append(emit(
             f"fig5/avg_gap/k{k}", 0.0,
-            f"avg_gap_pct={np.mean(gaps)*100:.2f};trained_agent={trained}"))
+            f"avg_gap_pct={np.mean(gaps):.2f};trained_agent={trained};"
+            f"oracle_parity={rec['oracle']['parity']}"))
     return lines

@@ -39,30 +39,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import RespectScheduler, all_model_graphs, sample_dag  # noqa: E402
+from repro.core import RespectScheduler  # noqa: E402
 from repro.serving import SchedulerService  # noqa: E402
 
-from .common import emit  # noqa: E402
+from .common import emit, traffic_pool  # noqa: E402
 
 N_STAGES = 4
 HIDDEN = 128          # container-scale deployment config (as batched bench)
 MAX_BATCH = 16
 MAX_WAIT_MS = 5.0
 RATE_MULT = 3.0       # offered load = RATE_MULT * measured naive capacity
-
-
-def _build_pool(smoke: bool, rng: np.random.Generator):
-    n_synth = 12 if smoke else 16
-    sizes = rng.integers(8, 41, size=n_synth)
-    degs = rng.integers(2, 5, size=n_synth)
-    pool = [sample_dag(rng, n=int(n), deg=int(d))
-            for n, d in zip(sizes, degs)]
-    n_models = 0
-    if not smoke:
-        models = list(all_model_graphs().values())
-        pool += models
-        n_models = len(models)
-    return pool, n_synth, n_models
 
 
 def _run_service_trace(sched, trace, arrivals, max_batch, max_wait_ms):
@@ -105,7 +91,9 @@ def run(smoke: bool = False, out_json: str | Path | None = None,
         n_requests: int | None = None, check: bool = False,
         rate_mult: float = RATE_MULT):
     rng = np.random.default_rng(0)
-    pool, n_synth, n_models = _build_pool(smoke, rng)
+    # the shared pool (repro.eval.scenarios): the eval grid's "traffic"
+    # scenario scores gap-to-optimal on EXACTLY these graphs
+    pool, n_synth, n_models = traffic_pool(smoke, rng)
     n_requests = n_requests or (120 if smoke else 240)
     trace = [pool[int(i)] for i in rng.integers(0, len(pool), n_requests)]
     repeat = 2 if smoke else 3

@@ -53,12 +53,20 @@ def main() -> int:
                          "match_exact_service / latency_finite hard flags")
     ap.add_argument("--traffic-baseline", default=None,
                     help="checked-in BENCH_traffic.json baseline")
+    ap.add_argument("--eval-fresh", default=None,
+                    help="fresh BENCH_eval-schema json; guards the "
+                         "gap-to-optimal tables (match_rate_* floors, "
+                         "gap_p95_* ceilings) against --eval-baseline plus "
+                         "the oracle_parity / all_schedules_valid hard "
+                         "flags")
+    ap.add_argument("--eval-baseline", default=None,
+                    help="checked-in BENCH_eval.json baseline")
     args = ap.parse_args()
     metrics = args.metric or ["speedup_traffic"]
     if (args.fresh is None and args.train_fresh is None
-            and args.traffic_fresh is None):
+            and args.traffic_fresh is None and args.eval_fresh is None):
         ap.error("nothing to guard: pass FRESH BASELINE and/or "
-                 "--train-fresh and/or --traffic-fresh")
+                 "--train-fresh and/or --traffic-fresh and/or --eval-fresh")
     if args.fresh is not None and args.baseline is None:
         ap.error("FRESH given without BASELINE")
 
@@ -111,6 +119,67 @@ def main() -> int:
                   f"{trf['service_failed']} requests errored "
                   f"({args.traffic_fresh})")
             failed = True
+    if args.eval_fresh:
+        ef = json.loads(Path(args.eval_fresh).read_text())
+        eb = (json.loads(Path(args.eval_baseline).read_text())
+              if args.eval_baseline else {})
+        # the quality tables are only comparable between runs of the SAME
+        # agent: the baseline is pinned with the seeded fallback weights
+        # (reproducible anywhere), and a box with a trained checkpoint in
+        # artifacts/ would produce different (better) tables — that is
+        # not a regression signal either way, so skip the ratio guards
+        # and keep only the hard correctness flags
+        same_agent = ("trained_agent" not in eb
+                      or ef.get("trained_agent") == eb.get("trained_agent"))
+        if not same_agent:
+            print("[guard] SKIP eval quality tables: fresh trained_agent="
+                  f"{ef.get('trained_agent')} != baseline "
+                  f"{eb.get('trained_agent')} (different agents are not "
+                  "comparable)")
+        # quality floors: match rates must not collapse (ratio guard, like
+        # the throughput metrics — a match rate is a rate, so the relative
+        # floor transfers across machines)
+        for m in (("match_rate_respect", "match_rate_compiler",
+                   "match_rate_list") if same_agent else ()):
+            guard_ratio(ef, eb, m)
+        # gap ceilings: LOWER is better, so the guard inverts — fail when
+        # the fresh gap exceeds baseline / min-ratio (plus a small absolute
+        # slack so a 0.0 baseline doesn't demand exact zeros forever)
+        for m in (("gap_p95_respect", "gap_mean_respect")
+                  if same_agent else ()):
+            if m not in eb:
+                print(f"[guard] SKIP {m}: not in baseline")
+                continue
+            if m not in ef:
+                print(f"[guard] FAIL {m}: missing from fresh summary")
+                failed = True
+                continue
+            # relax in the right direction whatever the baseline's sign:
+            # gaps can be legitimately negative (a policy beating the
+            # unrefined contiguous reference), and baseline/min_ratio
+            # would TIGHTEN a negative ceiling instead of relaxing it
+            ceiling = max(eb[m] / args.min_ratio,
+                          eb[m] * args.min_ratio) + 1e-6
+            status = "FAIL" if ef[m] > ceiling else "ok"
+            failed |= ef[m] > ceiling
+            print(f"[guard] {status:4s} {m}: fresh={ef[m]:.4f} "
+                  f"baseline={eb[m]:.4f} ceiling={ceiling:.4f}")
+        # hard correctness flags: parity with the host exact solver and
+        # dependency-validity of every scored schedule are machine-
+        # independent invariants
+        for flag in ("oracle_parity", "all_schedules_valid"):
+            if ef.get(flag) is not True:
+                print(f"[guard] FAIL {flag}: eval invariant broken "
+                      f"({args.eval_fresh})")
+                failed = True
+        for name in ("respect", "compiler", "list"):
+            below = ef.get("aggregate", {}).get(name, {}).get(
+                "below_refined_optimum", 0)
+            if below:
+                print(f"[guard] FAIL below_refined_optimum[{name}]={below}: "
+                      f"schedule scored below the true monotone optimum "
+                      f"({args.eval_fresh})")
+                failed = True
     # exact-match flags are hard invariants, not ratios.  The smoke flags
     # compare the two serving APIs (batch-of-1 vs batch-of-N programs);
     # the serve summary carries the one vs the HOST reference pipeline;

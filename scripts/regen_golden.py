@@ -8,12 +8,18 @@ triple (|V|, deg(V), depth) plus a schedule snapshot — sha256 digests of
 the decoded order and the repaired assignment, and the evaluated
 bottleneck/latency — produced by a FIXED agent (``RespectScheduler.init``
 at the pinned seed/hidden below, deterministic across machines for a
-given jax version) on the default Edge-TPU pipeline system.
+given jax version) on the default Edge-TPU pipeline system, AND the
+gap-to-optimal record against the exact solver: the optimal assignment
+digest and bottleneck (batched device oracle, parity-asserted against
+the host ``exact_dp`` at regen time), the agent's optimality gap and
+whether it matches the optimum.
 
-``tests/test_dnn_golden.py`` diffs live schedules against this file, so
-a decode, cost-model, rho or repair change that shifts any real-model
-schedule fails loudly instead of drifting silently.  Run this script and
-commit the diff ONLY when such a shift is intended and reviewed.
+``tests/test_dnn_golden.py`` diffs live schedules against this file — and
+re-renders the whole payload in-process to assert it round-trips
+BYTE-identically — so a decode, cost-model, rho, repair or exact-solver
+change that shifts any real-model schedule or gap fails loudly instead
+of drifting silently.  Run this script and commit the diff ONLY when
+such a shift is intended and reviewed.
 """
 
 from __future__ import annotations
@@ -37,24 +43,37 @@ def digest(arr) -> str:
     return hashlib.sha256(np.asarray(arr, dtype=np.int64).tobytes()).hexdigest()
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="tests/golden/dnn_schedules.json")
-    args = ap.parse_args()
+def build_payload() -> dict:
+    """The full golden payload, computed from the pinned configuration.
+
+    Pure function of the code + pinned constants: the round-trip test
+    re-runs it in-process and compares bytes against the checked-in file.
+    """
+    import numpy as np
 
     from repro.core import (MODEL_SPECS, RespectScheduler, build_model_graph,
                             evaluate_schedule)
     from repro.core.costmodel import PipelineSystem
+    from repro.eval import ExactOracle
 
     sched = RespectScheduler.init(seed=SEED, hidden=HIDDEN)
     system = PipelineSystem(n_stages=N_STAGES)
     graphs = {name: build_model_graph(name) for name in MODEL_SPECS}
     results = sched.schedule_many(list(graphs.values()), N_STAGES, system,
                                   use_cache=False)
+    oracle = ExactOracle()
+    opts = oracle.solve_many(list(graphs.values()), N_STAGES, system)
+    hosts = ExactOracle.solve_many_host(list(graphs.values()), N_STAGES,
+                                        system)
+    for name, o, h in zip(graphs, opts, hosts):
+        assert np.array_equal(o.assignment, h.assignment), (
+            f"{name}: device oracle diverged from host exact_dp at regen "
+            "time — fix the solver before re-pinning")
 
     models = {}
-    for (name, g), res in zip(graphs.items(), results):
+    for (name, g), res, opt in zip(graphs.items(), results, opts):
         ev = evaluate_schedule(g, res.assignment, system)
+        gap = ev.bottleneck_s / opt.bottleneck_s - 1.0
         models[name] = {
             "n": g.n,
             "deg": g.max_in_degree,
@@ -63,17 +82,40 @@ def main() -> int:
             "assign_sha256": digest(res.assignment),
             "bottleneck_s": ev.bottleneck_s,
             "latency_s": ev.latency_s,
+            "opt_assign_sha256": digest(opt.assignment),
+            "opt_bottleneck_s": opt.bottleneck_s,
+            "opt_latency_s": opt.latency_s,
+            "gap_to_optimal": gap,
+            "matches_optimal": bool(gap <= 1e-9),
         }
-        print(f"{name:20s} n={g.n:4d} assign={models[name]['assign_sha256'][:12]} "
-              f"bottleneck={ev.bottleneck_s:.6e}")
 
-    out = Path(args.out)
-    out.parent.mkdir(parents=True, exist_ok=True)
-    out.write_text(json.dumps({
+    return {
         "meta": {"seed": SEED, "hidden": HIDDEN, "n_stages": N_STAGES,
                  "system": "PipelineSystem(n_stages=4) defaults"},
         "models": models,
-    }, indent=1) + "\n")
+    }
+
+
+def render(payload: dict) -> str:
+    """The exact on-disk serialization (the round-trip contract)."""
+    return json.dumps(payload, indent=1) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="tests/golden/dnn_schedules.json")
+    args = ap.parse_args()
+
+    payload = build_payload()
+    for name, m in payload["models"].items():
+        print(f"{name:20s} n={m['n']:4d} assign={m['assign_sha256'][:12]} "
+              f"bottleneck={m['bottleneck_s']:.6e} "
+              f"gap={m['gap_to_optimal']*100:.2f}% "
+              f"match={m['matches_optimal']}")
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(render(payload))
     print(f"wrote {out}")
     return 0
 

@@ -89,6 +89,15 @@ class PaddedGraphBatch:
     representation shared by serving (labels absent) and RL training
     (labels present) — see :mod:`repro.core.rl`.
 
+    The optional ``exact_assign``/``exact_bottleneck`` fields carry the
+    batched device oracle's own solution of the pack
+    (:meth:`repro.eval.oracle.ExactOracle.label_pack` fills them via
+    :func:`repro.core.segment.exact_dp_batch`): the per-node exact-DP
+    stage assignment (zero past ``n_valid``) and the f32 DP bottleneck
+    per graph.  Unlike the imitation labels above, these are *evaluation*
+    ground truth — the gap-to-optimal runner scores policies against
+    them without ever leaving the padded representation.
+
     ``dense`` is a STATIC (pytree-aux) flag set at pack time: True iff every
     graph fills ``bucket_n`` exactly.  Consumers use it to skip the
     ``n_valid`` masking machinery entirely for equal-size packs (e.g. the
@@ -106,13 +115,16 @@ class PaddedGraphBatch:
     n_valid: jnp.ndarray      # (B,) int32 real node count per graph
     label_assign: jnp.ndarray | None = None  # (B, bucket_n) int32, 0 padded
     label_order: jnp.ndarray | None = None   # (B, bucket_n) int32, 0 padded
+    exact_assign: jnp.ndarray | None = None  # (B, bucket_n) int32, 0 padded
+    exact_bottleneck: jnp.ndarray | None = None  # (B,) f32 DP objective
     dense: bool = False       # static: all graphs fill bucket_n exactly
 
     def tree_flatten(self):
         return (self.feats, self.parent_mat, self.child_mat,
                 self.ancestor_mat, self.flops, self.param_bytes,
                 self.out_bytes, self.n_valid, self.label_assign,
-                self.label_order), self.dense
+                self.label_order, self.exact_assign,
+                self.exact_bottleneck), self.dense
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -133,6 +145,15 @@ class PaddedGraphBatch:
     @property
     def has_labels(self) -> bool:
         return self.label_assign is not None
+
+    @property
+    def has_exact(self) -> bool:
+        return self.exact_assign is not None
+
+    def with_exact(self, exact_assign, exact_bottleneck) -> "PaddedGraphBatch":
+        """A copy carrying the exact-oracle solution of this pack."""
+        return dataclasses.replace(
+            self, exact_assign=exact_assign, exact_bottleneck=exact_bottleneck)
 
     def valid_mask(self) -> jnp.ndarray:
         """(B, bucket_n) bool: True on real-node slots."""
@@ -162,6 +183,8 @@ class PaddedGraphBatch:
             n_valid=jnp.concatenate([self.n_valid, zrow(self.n_valid)]),
             label_assign=zcat(self.label_assign),
             label_order=zcat(self.label_order),
+            exact_assign=zcat(self.exact_assign),
+            exact_bottleneck=zcat(self.exact_bottleneck),
             dense=False,    # inert rows have n_valid = 0
         )
 

@@ -36,10 +36,60 @@ from .costmodel import PipelineSystem
 __all__ = [
     "rho_dp_jax",
     "rho_dp_batch",
+    "exact_dp_jax",
+    "exact_dp_batch",
     "dependency_repair_jax",
     "co_consumer_repair_jax",
     "repair_jax",
 ]
+
+
+def exact_dp_jax(
+    flops,
+    param_bytes,
+    out_bytes,
+    parent_mat,
+    n_stages: int,
+    system: PipelineSystem,
+    n_valid=None,
+):
+    """Jittable twin of :func:`repro.core.exact.exact_dp` (default order).
+
+    The host exact solver is the contiguous-segmentation DP over the node
+    *index* order (topological by :class:`~repro.core.graph.CompGraph`
+    construction) — exactly :func:`rho_dp_jax` on the identity order, so
+    this shares the DP program (and its lexicographic (bottleneck,
+    latency) tie-break discipline) with the serving path and the RL
+    reward.  ``n_valid`` marks the real-node prefix of a padded graph;
+    the valid-prefix assignment is bit-identical to the host solver's
+    (differentially fuzzed over >= 500 random DAGs in
+    ``tests/test_eval_oracle.py``).
+
+    Returns ``(assign, bottleneck)`` like :func:`rho_dp_jax`; the
+    bottleneck is the f32 DP objective — eval-grade float objectives are
+    re-derived on the host from the integer assignment
+    (:class:`repro.eval.oracle.ExactOracle`), which is what makes the
+    oracle's bottleneck/latency bit-identical to the host reference.
+    """
+    n = flops.shape[0]
+    order = jnp.arange(n, dtype=jnp.int32)
+    return rho_dp_jax(order, flops, param_bytes, out_bytes, parent_mat,
+                      n_stages, system, n_valid=n_valid)
+
+
+def exact_dp_batch(flops, param_bytes, out_bytes, parent_mat,
+                   n_stages: int, system, n_valid):
+    """vmapped pad-aware :func:`exact_dp_jax` over a padded batch.
+
+    All array args carry a leading batch dim (``n_valid`` is ``(B,)``);
+    one XLA program solves every graph in the pack exactly — the batched
+    device-side oracle under :mod:`repro.eval` and the exact-label filler
+    for :class:`repro.core.batching.PaddedGraphBatch`.
+    """
+    def one(fl, pb, ob, pm, nv):
+        return exact_dp_jax(fl, pb, ob, pm, n_stages, system, n_valid=nv)
+
+    return jax.vmap(one)(flops, param_bytes, out_bytes, parent_mat, n_valid)
 
 
 def rho_dp_batch(orders, flops, param_bytes, out_bytes, parent_mat,

@@ -1,0 +1,29 @@
+"""Gap-to-optimal evaluation subsystem.
+
+Turns the paper's comparative evidence — RESPECT vs the exact optimum
+across synthetic families and the ten Table-I DNN graphs — into a
+continuously-guarded regression surface:
+
+* :mod:`repro.eval.oracle`    — batched device-side exact solver
+  (:class:`ExactOracle`), bit-identical to the host ``exact_dp``;
+* :mod:`repro.eval.scenarios` — the scenario grid and the shared graph
+  pools the serving benches also score;
+* :mod:`repro.eval.runner`    — scores RL / heuristic / list policies
+  against the oracle (match rate, optimality gap, solve-time speedup);
+* :mod:`repro.eval.report`    — the ``BENCH_eval.json`` artifact writer
+  and the hard correctness checks CI enforces.
+"""
+
+from .oracle import ExactOracle, OracleSolution  # noqa: F401
+from .report import check_results, emit_lines, summarize, write_report  # noqa: F401
+from .runner import MATCH_RTOL, POLICY_NAMES, run_grid, run_scenario  # noqa: F401
+from .scenarios import (  # noqa: F401
+    SYNTH_FAMILIES,
+    Scenario,
+    layered_dag,
+    scenario_grid,
+    synthetic_dag,
+    table1_scenarios,
+    traffic_pool,
+    traffic_synthetic_pool,
+)

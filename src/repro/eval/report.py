@@ -1,0 +1,115 @@
+"""Eval artifact writer: ``BENCH_eval.json`` + bench-harness CSV lines.
+
+The artifact's top level carries flat guard keys
+(``match_rate_respect``, ``gap_p95_respect``, ``oracle_parity``,
+``all_schedules_valid``, ``speedup_oracle_batched``, ...) so
+``scripts/check_bench_regression.py --eval-fresh/--eval-baseline`` can
+diff them against the checked-in baseline without schema walking; the
+full per-scenario and per-Table-I-model tables sit underneath.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .runner import POLICY_NAMES
+
+__all__ = ["summarize", "write_report", "emit_lines", "check_results"]
+
+
+def _strip_private(results: dict) -> dict:
+    """Drop runner-internal keys (e.g. the raw per-graph gap lists) from
+    a deep copy, keeping the artifact reviewable."""
+    out = json.loads(json.dumps(
+        {k: v for k, v in results.items()},
+        default=lambda o: None))
+    for rec in out.get("scenarios", []):
+        for pol in rec.get("policies", {}).values():
+            pol.pop("_gaps", None)
+    return out
+
+
+def summarize(results: dict, meta: dict | None = None) -> dict:
+    """The BENCH_eval.json payload: flat guard keys + full tables."""
+    out: dict = dict(meta or {})
+    out["oracle_parity"] = results["oracle_parity"]
+    out["all_schedules_valid"] = results["all_schedules_valid"]
+    out["speedup_oracle_batched"] = results["speedup_oracle_batched"]
+    out["speedup_respect_vs_exact"] = results["speedup_respect_vs_exact"]
+    for name in POLICY_NAMES:
+        agg = results["aggregate"][name]
+        out[f"match_rate_{name}"] = agg["match_rate"]
+        out[f"gap_mean_{name}"] = agg["gap_mean"]
+        out[f"gap_p95_{name}"] = agg["gap_p95"]
+        out[f"gap_max_{name}"] = agg["gap_max"]
+        out[f"beats_oracle_{name}"] = agg["beats_oracle"]
+    stripped = _strip_private(results)
+    out["aggregate"] = stripped["aggregate"]
+    out["scenarios"] = stripped["scenarios"]
+    # the Table-I per-model gap table (paper Tables II-III / Fig. 5 view)
+    table1: dict = {}
+    for rec in stripped["scenarios"]:
+        if rec["family"] != "dnn":
+            continue
+        for g in rec.get("graphs", []):
+            table1.setdefault(g["model"], {})[f"k{rec['n_stages']}"] = {
+                k: v for k, v in g.items() if k != "model"}
+    out["table1"] = table1
+    return out
+
+
+def write_report(results: dict, path: str | Path,
+                 meta: dict | None = None) -> dict:
+    summary = summarize(results, meta)
+    Path(path).write_text(json.dumps(summary, indent=1) + "\n")
+    return summary
+
+
+def emit_lines(results: dict, emit) -> None:
+    """Stream the grid as ``name,us,derived`` CSV via the bench emitter."""
+    for rec in results["scenarios"]:
+        orc = rec["oracle"]
+        emit(f"eval/{rec['name']}/oracle",
+             orc["t_device_s"] / max(rec["n_graphs"], 1) * 1e6,
+             f"speedup_vs_host={orc['speedup_device_vs_host']:.2f}x;"
+             f"parity={orc['parity']};bb_refined={orc['bb_refined']}")
+        for name in POLICY_NAMES:
+            pol = rec["policies"][name]
+            emit(f"eval/{rec['name']}/{name}",
+                 pol["t_s"] / max(rec["n_graphs"], 1) * 1e6,
+                 f"match_rate={pol['match_rate']:.3f};"
+                 f"gap_mean={pol['gap_mean']:.4f};"
+                 f"gap_p95={pol['gap_p95']:.4f};valid={pol['all_valid']}")
+    for name in POLICY_NAMES:
+        agg = results["aggregate"][name]
+        emit(f"eval/aggregate/{name}", 0.0,
+             f"n={agg['n']};match_rate={agg['match_rate']:.3f};"
+             f"gap_mean={agg['gap_mean']:.4f};gap_p95={agg['gap_p95']:.4f}")
+    emit("eval/oracle_total", 0.0,
+         f"speedup_batched={results['speedup_oracle_batched']:.2f}x;"
+         f"speedup_respect_vs_exact="
+         f"{results['speedup_respect_vs_exact']:.1f}x;"
+         f"parity={results['oracle_parity']};"
+         f"all_valid={results['all_schedules_valid']}")
+
+
+def check_results(results: dict) -> list[str]:
+    """Hard invariants (empty list == OK): oracle parity and schedule
+    validity are correctness properties, not perf — any loss is a solver
+    bug regardless of machine."""
+    problems = []
+    if not results["oracle_parity"]:
+        problems.append("oracle_parity: device oracle diverged from host "
+                        "exact_dp")
+    if not results["all_schedules_valid"]:
+        problems.append("all_schedules_valid: a scored schedule violates "
+                        "dependencies")
+    for name in POLICY_NAMES:
+        agg = results["aggregate"][name]
+        if agg["below_refined_optimum"] > 0:
+            problems.append(
+                f"below_refined_optimum_{name}="
+                f"{agg['below_refined_optimum']}: a schedule scored below "
+                "the bb-refined true monotone optimum (oracle bug)")
+    return problems

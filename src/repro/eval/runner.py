@@ -1,0 +1,275 @@
+"""Gap-to-optimal scenario-grid runner.
+
+For every :class:`~repro.eval.scenarios.Scenario` this runner scores
+three schedulers against the exact oracle:
+
+* ``respect``  — the RL policy (decode → rho → repair through the fused
+  serving engine, exactly what production traffic gets);
+* ``compiler`` — the Edge-TPU-compiler emulation
+  (:func:`repro.core.heuristic.compiler_partition`);
+* ``list``     — the RCS list-scheduling baseline
+  (:func:`repro.core.heuristic.list_schedule`).
+
+The reference is the batched device oracle
+(:class:`repro.eval.oracle.ExactOracle`), cross-checked per scenario
+against the host ``exact_dp`` loop (**oracle parity** — any assignment
+mismatch is a solver bug and fails the bench guard).  On graphs small
+enough (``bb_max_n``), the contiguous-DP optimum is refined with the
+branch-and-bound solver over ALL monotone assignments
+(:func:`repro.core.exact.exact_bb`), so the reported optimum is the true
+monotone optimum wherever tractable — and every scored schedule is
+checked dependency-valid with cost >= that optimum.
+
+Reported per scenario (mirroring Tables II-III / Fig. 5): exact-match
+rate, mean/p95/max optimality gap, schedule validity, and solve-time
+speedups (batched device oracle vs host loop; RL policy vs exact
+solver).  Per-graph records are kept for the Table-I scenarios so
+``benchmarks/fig5_gap_to_optimal.py`` can report the paper's per-model
+parameter-caching gap from the same run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core.costmodel import PipelineSystem, evaluate_schedule
+from ..core.exact import exact_bb, order_from_assignment
+from ..core.graph import CompGraph, validate_monotone
+from ..core.heuristic import compiler_partition, list_schedule
+from ..core.respect import RespectScheduler
+from .oracle import ExactOracle, OracleSolution
+from .scenarios import Scenario
+
+__all__ = ["POLICY_NAMES", "run_scenario", "run_grid", "MATCH_RTOL"]
+
+POLICY_NAMES = ("respect", "compiler", "list")
+
+# a policy "matches the exact optimum" when its bottleneck is within this
+# relative tolerance — the same 1e-9 discipline the golden pins use for
+# float objectives re-derived from integer assignments
+MATCH_RTOL = 1e-9
+
+
+def _policy_assignments(name: str, sched: RespectScheduler,
+                        graphs: list[CompGraph], n_stages: int,
+                        system: PipelineSystem) -> tuple[list[np.ndarray], float]:
+    """(assignments, wall_seconds) for one policy over a scenario."""
+    t0 = time.perf_counter()
+    if name == "respect":
+        res = sched.schedule_many(graphs, n_stages, system, use_cache=False)
+        assigns = [r.assignment for r in res]
+    elif name == "compiler":
+        assigns = [compiler_partition(g, n_stages, system) for g in graphs]
+    elif name == "list":
+        assigns = [list_schedule(g, n_stages, system) for g in graphs]
+    else:
+        raise ValueError(f"unknown policy {name!r}")
+    return assigns, time.perf_counter() - t0
+
+
+def _refine_with_bb(graphs: list[CompGraph], dp: list[OracleSolution],
+                    n_stages: int, system: PipelineSystem,
+                    bb_max_n: int, bb_budget_s: float):
+    """True monotone optimum where tractable: exact_bb (seeded with the
+    DP incumbent) replaces the contiguous-DP reference on graphs with
+    n <= bb_max_n.  Returns (opts, n_refined, n_improved)."""
+    opts: list[OracleSolution] = []
+    is_refined: list[bool] = []
+    improved = 0
+    for g, sol in zip(graphs, dp):
+        refined = g.n <= bb_max_n
+        if refined:
+            a, _ = exact_bb(g, n_stages, system, time_budget_s=bb_budget_s)
+            ev = evaluate_schedule(g, a, system)
+            if ev.bottleneck_s < sol.bottleneck_s * (1 - MATCH_RTOL):
+                improved += 1
+                sol = OracleSolution(
+                    assignment=np.asarray(a, dtype=np.int64),
+                    order=order_from_assignment(a),
+                    bottleneck_s=ev.bottleneck_s,
+                    latency_s=ev.latency_s)
+        opts.append(sol)
+        is_refined.append(refined)
+    return opts, is_refined, improved
+
+
+def _param_gap_pct(g: CompGraph, assign: np.ndarray, opt: OracleSolution,
+                   system: PipelineSystem) -> float:
+    """Fig. 5 metric: mean |per-stage parameter bytes - optimal| as a
+    percentage of the optimal placement's peak stage."""
+    ev_p = evaluate_schedule(g, assign, system)
+    ev_o = evaluate_schedule(g, opt.assignment, system)
+    denom = max(float(ev_o.stage_params.max()), 1.0)
+    return float(np.mean(np.abs(ev_p.stage_params - ev_o.stage_params))) \
+        / denom * 100.0
+
+
+def run_scenario(
+    sc: Scenario,
+    sched: RespectScheduler,
+    oracle: ExactOracle | None = None,
+    bb_max_n: int = 12,
+    bb_budget_s: float = 2.0,
+    keep_graph_records: bool | None = None,
+) -> dict:
+    """Score one scenario; returns a JSON-able record (see module doc)."""
+    oracle = oracle or ExactOracle()
+    system = PipelineSystem(n_stages=sc.n_stages)
+    graphs = sc.build()
+    k = sc.n_stages
+    if keep_graph_records is None:
+        keep_graph_records = sc.family == "dnn"
+
+    # ---- exact reference: host loop vs batched device program -------- #
+    t0 = time.perf_counter()
+    host = ExactOracle.solve_many_host(graphs, k, system)
+    t_host = time.perf_counter() - t0
+    oracle.warmup(graphs, k, system)              # warm compile (untimed,
+                                                  # device-only: no host
+                                                  # objective derivation)
+    t0 = time.perf_counter()
+    dev = oracle.solve_many(graphs, k, system)
+    t_dev = time.perf_counter() - t0
+    parity = all(
+        np.array_equal(h.assignment, d.assignment)
+        and np.array_equal(h.order, d.order)
+        and h.bottleneck_s == d.bottleneck_s and h.latency_s == d.latency_s
+        for h, d in zip(host, dev))
+
+    opts, is_refined, bb_improved = _refine_with_bb(
+        graphs, dev, k, system, bb_max_n, bb_budget_s)
+
+    # ---- policies ----------------------------------------------------- #
+    policies: dict = {}
+    graph_records: list[dict] = []
+    if keep_graph_records:
+        graph_records = [
+            {"model": g.model_name, "n": g.n,
+             "opt_bottleneck_s": o.bottleneck_s,
+             "opt_latency_s": o.latency_s}
+            for g, o in zip(graphs, opts)]
+    for name in POLICY_NAMES:
+        if name == "respect":
+            _policy_assignments(name, sched, graphs, k, system)  # warm jit
+        assigns, t_policy = _policy_assignments(name, sched, graphs, k, system)
+        gaps, valid, matches, beats, below_opt = [], True, 0, 0, 0
+        for i, (g, a, opt) in enumerate(zip(graphs, assigns, opts)):
+            ok = validate_monotone(g, a, k)
+            valid &= ok
+            ev = evaluate_schedule(g, a, system)
+            gap = ev.bottleneck_s / opt.bottleneck_s - 1.0
+            gaps.append(gap)
+            if abs(gap) <= MATCH_RTOL:
+                matches += 1    # ties the reference; beating it (only
+                                # possible vs an unrefined DP reference)
+                                # is NOT a match — counted separately
+            if gap < -MATCH_RTOL:
+                beats += 1       # gap below the DP reference: legitimate
+                                 # where contiguity is a restriction ...
+                if is_refined[i]:
+                    below_opt += 1   # ... but below the bb-refined TRUE
+                                     # monotone optimum = solver bug
+            if keep_graph_records:
+                graph_records[i][f"{name}_bottleneck_s"] = ev.bottleneck_s
+                graph_records[i][f"{name}_gap"] = gap
+                graph_records[i][f"{name}_match"] = bool(abs(gap) <= MATCH_RTOL)
+                graph_records[i][f"{name}_param_gap_pct"] = _param_gap_pct(
+                    g, a, opt, system)
+                graph_records[i][f"{name}_valid"] = bool(ok)
+        gaps_arr = np.asarray(gaps)
+        policies[name] = {
+            "n": len(graphs),
+            "t_s": t_policy,
+            "match_rate": matches / len(graphs),
+            "gap_mean": float(gaps_arr.mean()),
+            "gap_p95": float(np.percentile(gaps_arr, 95.0)),
+            "gap_max": float(gaps_arr.max()),
+            "gap_min": float(gaps_arr.min()),
+            "beats_oracle": beats,
+            "below_refined_optimum": below_opt,
+            "all_valid": bool(valid),
+            "_gaps": gaps,      # stripped by the report writer; used for
+                                # exact cross-scenario aggregation
+        }
+
+    rec = {
+        "name": sc.name,
+        "family": sc.family,
+        "n_stages": k,
+        "n_graphs": len(graphs),
+        "oracle": {
+            "t_host_s": t_host,
+            "t_device_s": t_dev,
+            "speedup_device_vs_host": t_host / max(t_dev, 1e-12),
+            "parity": bool(parity),
+            "bb_refined": int(sum(is_refined)),
+            "bb_improved": bb_improved,
+        },
+        "policies": policies,
+    }
+    if keep_graph_records:
+        rec["graphs"] = graph_records
+    return rec
+
+
+def run_grid(
+    scenarios: list[Scenario],
+    sched: RespectScheduler | None = None,
+    oracle: ExactOracle | None = None,
+    bb_max_n: int = 12,
+    bb_budget_s: float = 2.0,
+    progress=None,
+) -> dict:
+    """Run every scenario and aggregate per-policy quality across the
+    whole grid.  ``progress`` (optional callable) receives each finished
+    scenario record — the bench harness streams CSV lines from it."""
+    sched = sched or RespectScheduler.init(seed=0)
+    oracle = oracle or ExactOracle()
+    recs = []
+    for sc in scenarios:
+        rec = run_scenario(sc, sched, oracle, bb_max_n=bb_max_n,
+                           bb_budget_s=bb_budget_s)
+        recs.append(rec)
+        if progress is not None:
+            progress(rec)
+
+    aggregate: dict = {}
+    for name in POLICY_NAMES:
+        gaps = np.asarray([g for r in recs
+                           for g in r["policies"][name]["_gaps"]])
+        n_total = int(gaps.size)
+        matches = sum(
+            round(r["policies"][name]["match_rate"] * r["n_graphs"])
+            for r in recs)
+        aggregate[name] = {
+            "n": n_total,
+            "match_rate": matches / n_total,
+            "gap_mean": float(gaps.mean()),
+            "gap_p95": float(np.percentile(gaps, 95.0)),
+            "gap_max": float(gaps.max()),
+            "gap_min": float(gaps.min()),
+            "beats_oracle": int(sum(r["policies"][name]["beats_oracle"]
+                                    for r in recs)),
+            "below_refined_optimum": int(sum(
+                r["policies"][name]["below_refined_optimum"] for r in recs)),
+            "all_valid": bool(all(r["policies"][name]["all_valid"]
+                                  for r in recs)),
+            "t_s": float(sum(r["policies"][name]["t_s"] for r in recs)),
+        }
+
+    t_host = float(sum(r["oracle"]["t_host_s"] for r in recs))
+    t_dev = float(sum(r["oracle"]["t_device_s"] for r in recs))
+    return {
+        "scenarios": recs,
+        "aggregate": aggregate,
+        "oracle_parity": bool(all(r["oracle"]["parity"] for r in recs)),
+        "all_schedules_valid": bool(all(
+            aggregate[p]["all_valid"] for p in POLICY_NAMES)),
+        "t_exact_host_s": t_host,
+        "t_exact_device_s": t_dev,
+        "speedup_oracle_batched": t_host / max(t_dev, 1e-12),
+        "speedup_respect_vs_exact": t_host / max(
+            aggregate["respect"]["t_s"], 1e-12),
+    }

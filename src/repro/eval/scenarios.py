@@ -1,0 +1,184 @@
+"""Scenario grid: the families × sizes × stage-counts the eval runner sweeps.
+
+The paper's generalizability argument (PAPER.md, Tables II-III, Fig. 5)
+rests on three graph populations: small synthetic DAGs (where the exact
+solver is tractable and RESPECT is trained), the ten Table-I DNN graphs
+(where it must generalize), and the serving-traffic mix.  This module is
+the single source of truth for all three — the gap-to-optimal runner
+(:mod:`repro.eval.runner`) and the serving/table benches
+(``benchmarks/common.py``) build their pools HERE, so quality numbers
+and throughput numbers always describe the same graphs.
+
+Synthetic families (all seeded, all with ``max_in_degree <= 6`` so they
+pack under the repo-wide ``max_deg``):
+
+* ``chain``   — pure backbone chains (the Table-I DNNs are
+  chain-dominated; on a chain every monotone assignment is contiguous,
+  so the segmentation DP is provably the monotone optimum);
+* ``layered`` — nodes arranged in levels with edges only between
+  adjacent levels (inception-style parallel modules);
+* ``branchy`` — low chain fraction, high merge degree (the adversarial
+  end of the training distribution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.dnn_graphs import all_model_graphs
+from ..core.graph import CompGraph
+from ..core.sampler import sample_dag
+
+__all__ = [
+    "SYNTH_FAMILIES",
+    "Scenario",
+    "synthetic_dag",
+    "layered_dag",
+    "scenario_grid",
+    "table1_scenarios",
+    "traffic_synthetic_pool",
+    "traffic_pool",
+]
+
+SYNTH_FAMILIES = ("chain", "layered", "branchy")
+
+
+def layered_dag(rng: np.random.Generator, n: int) -> CompGraph:
+    """A level-structured DAG: every node at level l > 0 draws 1-3
+    parents from level l - 1 (deg capped at 4 so merge nodes stay within
+    the packed parent-matrix width)."""
+    if n < 3:
+        raise ValueError("need at least 3 nodes")
+    width = int(rng.integers(2, max(3, n // 4) + 1))
+    level_of: list[int] = []
+    level = 0
+    while len(level_of) < n:
+        size = 1 if level == 0 else int(rng.integers(1, width + 1))
+        size = min(size, n - len(level_of))
+        level_of.extend([level] * size)
+        level += 1
+    levels = np.asarray(level_of)
+    parents: list[list[int]] = [[] for _ in range(n)]
+    for v in range(1, n):
+        prev = np.flatnonzero(levels == levels[v] - 1)
+        k = int(rng.integers(1, min(4, len(prev)) + 1))
+        ps = rng.choice(prev, size=k, replace=False)
+        parents[v] = sorted(int(u) for u in ps)
+    # attributes: same lognormal CNN-like profile as sample_dag
+    depth_pos = np.arange(n) / max(n - 1, 1)
+    out_bytes = np.exp(rng.normal(0.0, 0.6, n)) * 3e5 * (1.0 - 0.85 * depth_pos)
+    param_bytes = np.exp(rng.normal(0.0, 0.9, n)) * 3e5 * (0.3 + 1.7 * depth_pos)
+    param_bytes[rng.random(n) < 0.3] = 0.0
+    flops = param_bytes * rng.uniform(30, 120, n) + out_bytes * rng.uniform(1, 8, n)
+    return CompGraph(parents=parents, flops=flops, param_bytes=param_bytes,
+                     out_bytes=out_bytes, model_name=f"layered_n{n}")
+
+
+def synthetic_dag(family: str, rng: np.random.Generator, n: int) -> CompGraph:
+    """Draw one graph from a named synthetic family."""
+    if family == "chain":
+        return sample_dag(rng, n=n, deg=1, chain_frac_range=(1.0, 1.0))
+    if family == "layered":
+        return layered_dag(rng, n)
+    if family == "branchy":
+        deg = int(rng.integers(3, 5))
+        return sample_dag(rng, n=n, deg=min(deg, n - 2),
+                          chain_frac_range=(0.3, 0.6))
+    raise ValueError(f"unknown family {family!r}; one of {SYNTH_FAMILIES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One cell of the eval grid: a seeded graph population × a stage
+    count.  ``build()`` is deterministic, so every consumer (runner,
+    benches, tests) sees the same graphs for the same scenario."""
+
+    name: str
+    family: str              # chain | layered | branchy | dnn | traffic
+    n_stages: int
+    sizes: tuple[int, ...] = ()
+    graphs_per_size: int = 0
+    seed: int = 0
+    smoke: bool = False      # traffic family: pool config
+
+    def build(self) -> list[CompGraph]:
+        if self.family == "dnn":
+            return list(all_model_graphs().values())
+        if self.family == "traffic":
+            rng = np.random.default_rng(self.seed)
+            pool, _, _ = traffic_pool(self.smoke, rng)
+            return pool
+        rng = np.random.default_rng(self.seed)
+        return [synthetic_dag(self.family, rng, n)
+                for n in self.sizes for _ in range(self.graphs_per_size)]
+
+
+def table1_scenarios(stage_counts=(4, 5, 6)) -> list[Scenario]:
+    """The ten Table-I DNN graphs at the paper's stage counts."""
+    return [Scenario(name=f"dnn/k{k}", family="dnn", n_stages=k)
+            for k in stage_counts]
+
+
+def scenario_grid(smoke: bool = False,
+                  stage_counts: tuple[int, ...] | None = None,
+                  table1_stages: tuple[int, ...] | None = None) -> list[Scenario]:
+    """The full sweep: synthetic families (|V| ~= 5-30) × stage counts
+    (2-8) × the ten Table-I graphs × the serving-traffic pool.
+
+    ``smoke`` shrinks sizes/counts to the CI configuration (the one the
+    checked-in ``BENCH_eval.json`` pins) without dropping any family or
+    the Table-I coverage.
+    """
+    if stage_counts is None:
+        stage_counts = (2, 4, 8) if smoke else (2, 3, 4, 6, 8)
+    if table1_stages is None:
+        table1_stages = (4,) if smoke else (4, 5, 6)
+    sizes = (6, 10, 14, 20) if smoke else (5, 8, 12, 16, 20, 24, 30)
+    per_size = 3 if smoke else 4
+    out: list[Scenario] = []
+    for family in SYNTH_FAMILIES:
+        for k in stage_counts:
+            out.append(Scenario(
+                name=f"{family}/k{k}", family=family, n_stages=k,
+                sizes=sizes, graphs_per_size=per_size,
+                seed=hash_seed(family, k)))
+    out.extend(table1_scenarios(table1_stages))
+    out.append(Scenario(name="traffic/k4", family="traffic", n_stages=4,
+                        seed=0, smoke=smoke))
+    return out
+
+
+def hash_seed(family: str, k: int) -> int:
+    """Deterministic per-cell seed (crc32: PYTHONHASHSEED-independent)."""
+    import zlib
+    return zlib.crc32(f"{family}/k{k}".encode())
+
+
+# --------------------------------------------------------------------- #
+# shared pools: the serving benches score EXACTLY these graphs
+# --------------------------------------------------------------------- #
+def traffic_synthetic_pool(rng: np.random.Generator,
+                           n_graphs: int) -> list[CompGraph]:
+    """The mixed-size synthetic serving pool (|V| in [8, 40], deg in
+    [2, 4]) — the sampling sequence ``benchmarks/serve_traffic_bench.py``
+    has always used, now shared with the eval grid's traffic scenario."""
+    sizes = rng.integers(8, 41, size=n_graphs)
+    degs = rng.integers(2, 5, size=n_graphs)
+    return [sample_dag(rng, n=int(n), deg=int(d))
+            for n, d in zip(sizes, degs)]
+
+
+def traffic_pool(smoke: bool, rng: np.random.Generator):
+    """(pool, n_synthetic, n_models): the full serving-bench request pool
+    — synthetic mix plus, in full (non-smoke) mode, the ten Table-I
+    model graphs."""
+    n_synth = 12 if smoke else 16
+    pool = traffic_synthetic_pool(rng, n_synth)
+    n_models = 0
+    if not smoke:
+        models = list(all_model_graphs().values())
+        pool += models
+        n_models = len(models)
+    return pool, n_synth, n_models

@@ -1,6 +1,6 @@
 """Golden regression tests for the ten Table-I ImageNet model graphs.
 
-Two layers of pinning:
+Three layers of pinning:
 
 * **structure** — |V|, max in-degree and depth of every builder output
   must equal the paper's Table I (and the checked-in snapshot), so a
@@ -11,7 +11,13 @@ Two layers of pinning:
   cost model, rho DP, or repair that shifts a real-model schedule fails
   here loudly.  Intended shifts are re-pinned with
   ``PYTHONPATH=src python scripts/regen_golden.py`` and reviewed as a
-  diff of ``tests/golden/dnn_schedules.json``.
+  diff of ``tests/golden/dnn_schedules.json``;
+* **gap-to-optimal** — the exact-optimal assignment digest/bottleneck
+  per model and the pinned agent's optimality gap and match flag, so a
+  change to the exact solver OR a quality regression of the pinned
+  agent is caught, not just a schedule shift.  The regen script itself
+  is pinned too: ``build_payload`` + ``render`` must round-trip
+  BYTE-identically against the checked-in file.
 
 The digests cover all-integer arrays, so equality is exact; the float
 bottleneck/latency are re-derived from the integer assignment and
@@ -19,6 +25,7 @@ compared tightly.
 """
 
 import hashlib
+import importlib.util
 import json
 from pathlib import Path
 
@@ -28,6 +35,7 @@ import pytest
 from repro.core import (MODEL_SPECS, RespectScheduler, build_model_graph,
                         evaluate_schedule, validate_monotone)
 from repro.core.costmodel import PipelineSystem
+from repro.eval import ExactOracle
 
 GOLDEN_PATH = Path(__file__).parent / "golden" / "dnn_schedules.json"
 GOLDEN = json.loads(GOLDEN_PATH.read_text())
@@ -79,3 +87,57 @@ def test_schedule_snapshot_pinned(name, golden_results):
         g, res.assignment, PipelineSystem(n_stages=meta["n_stages"]))
     assert ev.bottleneck_s == pytest.approx(snap["bottleneck_s"], rel=1e-9)
     assert ev.latency_s == pytest.approx(snap["latency_s"], rel=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# gap-to-optimal pins
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def exact_solutions():
+    """Exact optimum for all ten models via the batched device oracle,
+    at the pinned stage count."""
+    meta = GOLDEN["meta"]
+    system = PipelineSystem(n_stages=meta["n_stages"])
+    graphs = {name: build_model_graph(name) for name in GOLDEN["models"]}
+    opts = ExactOracle().solve_many(
+        list(graphs.values()), meta["n_stages"], system)
+    return dict(zip(graphs, opts))
+
+
+@pytest.mark.parametrize("name", sorted(MODEL_SPECS))
+def test_gap_to_optimal_pinned(name, golden_results, exact_solutions):
+    """The exact optimum and the pinned agent's gap against it must both
+    stay where the snapshot recorded them — a solver change that shifts
+    the optimum fails here even if the agent's schedule is untouched."""
+    meta, graphs, results = golden_results
+    snap = GOLDEN["models"][name]
+    opt = exact_solutions[name]
+    assert _digest(opt.assignment) == snap["opt_assign_sha256"], (
+        f"{name}: exact-optimal assignment shifted — if intended, re-pin "
+        "with scripts/regen_golden.py")
+    assert opt.bottleneck_s == pytest.approx(snap["opt_bottleneck_s"],
+                                             rel=1e-9)
+    assert opt.latency_s == pytest.approx(snap["opt_latency_s"], rel=1e-9)
+    ev = evaluate_schedule(
+        graphs[name], results[name].assignment,
+        PipelineSystem(n_stages=meta["n_stages"]))
+    gap = ev.bottleneck_s / opt.bottleneck_s - 1.0
+    assert gap == pytest.approx(snap["gap_to_optimal"], rel=1e-6, abs=1e-9)
+    assert bool(gap <= 1e-9) == snap["matches_optimal"]
+    # the agent can tie but never beat the exact optimum on these
+    # chain-dominated graphs
+    assert gap >= -1e-9
+
+
+def test_regen_golden_round_trips_byte_identical(golden_results):
+    """Running the regen script's payload builder in-process reproduces
+    the checked-in golden file EXACTLY (bytes, not just values): the
+    snapshot can always be regenerated, and nothing edits it by hand."""
+    spec = importlib.util.spec_from_file_location(
+        "regen_golden", Path(__file__).parent.parent / "scripts"
+        / "regen_golden.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.render(mod.build_payload()) == GOLDEN_PATH.read_text(), (
+        "golden snapshot out of date or hand-edited — regenerate with "
+        "scripts/regen_golden.py and review the diff")

@@ -1,0 +1,287 @@
+"""Differential fuzz tier for the gap-to-optimal eval subsystem.
+
+Two families of guarantees, swept over seeded random-DAG corpora:
+
+* **oracle bit-identity** — the batched device-side exact solver
+  (:class:`repro.eval.ExactOracle`, i.e. vmapped
+  :func:`repro.core.segment.exact_dp_jax`) returns the SAME order,
+  assignment, bottleneck and latency as the host ``exact_dp`` reference
+  over >= 500 random DAGs, including tie-heavy uniform-cost surfaces
+  (where the lexicographic tie-break decides everything) and padded
+  packs (padded == unpadded on the valid prefix);
+* **eval soundness** — every schedule the runner scores is
+  dependency-valid and never costs less than the true monotone optimum
+  (``exact_bb``-refined) — any violation is a solver bug, caught here
+  rather than in a benchmark artifact.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PipelineSystem, RespectScheduler, exact_bb, exact_dp,
+                        evaluate_schedule, pack_padded, sample_dag)
+from repro.core.segment import exact_dp_jax
+from repro.eval import (ExactOracle, Scenario, check_results, layered_dag,
+                        run_grid, scenario_grid, summarize, synthetic_dag,
+                        traffic_pool)
+
+MAX_DEG = 6
+STAGE_COUNTS = (2, 3, 4, 5, 6, 7, 8)
+N_PER_K = 74          # 7 stage counts x 74 graphs = 518 >= 500
+
+
+def _uniform_costs(g):
+    """Flat cost surface: most segmentations tie on the bottleneck, so
+    only the lexicographic tie-break separates solutions."""
+    n = g.n
+    return dataclasses.replace(
+        g, flops=np.full(n, 1.0e9), param_bytes=np.full(n, 1.0e6),
+        out_bytes=np.full(n, 1.0e5))
+
+
+def _corpus(k: int) -> list:
+    """74 seeded graphs for stage count k: mixed sizes/degrees, every 3rd
+    tie-heavy, every 7th a pure chain, every 11th layered."""
+    out = []
+    for i in range(N_PER_K):
+        rng = np.random.default_rng((k, i))
+        n = int(rng.integers(5, 31))
+        if i % 7 == 0:
+            g = synthetic_dag("chain", rng, n)
+        elif i % 11 == 0:
+            g = layered_dag(rng, n)
+        else:
+            g = sample_dag(rng, n=n, deg=int(rng.integers(1, min(5, n - 1))))
+        if i % 3 == 0:
+            g = _uniform_costs(g)
+        out.append(g)
+    return out
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    return ExactOracle(max_compiled=64)
+
+
+# --------------------------------------------------------------------- #
+# (a) device oracle == host exact_dp, bit-identically, >= 500 graphs
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("k", STAGE_COUNTS)
+def test_oracle_bit_identical_to_host(oracle, k):
+    graphs = _corpus(k)
+    dev = oracle.solve_many(graphs, k)
+    host = ExactOracle.solve_many_host(graphs, k)
+    for i, (h, d) in enumerate(zip(host, dev)):
+        assert np.array_equal(h.assignment, d.assignment), (k, i)
+        assert np.array_equal(h.order, d.order), (k, i)
+        # objectives are re-derived f64 from the integer assignment on
+        # both sides, so equality is EXACT, not approx
+        assert h.bottleneck_s == d.bottleneck_s, (k, i)
+        assert h.latency_s == d.latency_s, (k, i)
+
+
+def test_oracle_bottleneck_consistent_with_host_dp_value():
+    """The re-derived f64 bottleneck agrees with the host DP's own
+    objective (same value modulo summation-order rounding)."""
+    for i in range(25):
+        rng = np.random.default_rng((99, i))
+        g = sample_dag(rng, n=int(rng.integers(6, 25)), deg=2)
+        k = int(rng.integers(2, 7))
+        a, dp_bneck = exact_dp(g, k)
+        sol = ExactOracle().solve(g, k)
+        assert sol.bottleneck_s == pytest.approx(dp_bneck, rel=1e-9)
+        assert np.array_equal(sol.assignment, a)
+
+
+@pytest.mark.parametrize("k", (3, 5))
+def test_exact_dp_jax_padded_equals_unpadded(k):
+    """Direct padded calls: a graph packed into a larger bucket solves to
+    the same valid-prefix assignment as its exact-size self."""
+    system = PipelineSystem(n_stages=k)
+    N = 32
+    for i in range(25):
+        rng = np.random.default_rng((k, 7_000 + i))
+        n = int(rng.integers(5, 25))
+        g = sample_dag(rng, n=n, deg=int(rng.integers(1, 5)))
+        if i % 3 == 0:
+            g = _uniform_costs(g)
+        host, _ = exact_dp(g, k, system)
+
+        exact = np.asarray(exact_dp_jax(
+            jnp.asarray(g.flops, jnp.float32),
+            jnp.asarray(g.param_bytes, jnp.float32),
+            jnp.asarray(g.out_bytes, jnp.float32),
+            jnp.asarray(g.parent_matrix(MAX_DEG)), k, system)[0])
+        fl = np.zeros(N, np.float32); fl[:n] = g.flops
+        pb = np.zeros(N, np.float32); pb[:n] = g.param_bytes
+        ob = np.zeros(N, np.float32); ob[:n] = g.out_bytes
+        pm = np.full((N, MAX_DEG), -1, np.int32)
+        pm[:n] = g.parent_matrix(MAX_DEG)
+        padded = np.asarray(exact_dp_jax(
+            jnp.asarray(fl), jnp.asarray(pb), jnp.asarray(ob),
+            jnp.asarray(pm), k, system, n_valid=jnp.int32(n))[0])
+        assert np.array_equal(host, exact), (i, n)
+        assert np.array_equal(host, padded[:n]), (i, n)
+
+
+def test_oracle_matches_true_monotone_optimum_on_chains(oracle):
+    """On a chain every monotone assignment is contiguous, so the
+    segmentation DP is provably the full monotone optimum — the
+    branch-and-bound solver can only tie it."""
+    for i in range(15):
+        rng = np.random.default_rng((5, i))
+        n = int(rng.integers(5, 11))
+        g = synthetic_dag("chain", rng, n)
+        k = int(rng.integers(2, 5))
+        sol = oracle.solve(g, k)
+        bb_a, _ = exact_bb(g, k, time_budget_s=5.0)
+        bb_ev = evaluate_schedule(g, bb_a, PipelineSystem(k))
+        assert sol.bottleneck_s == pytest.approx(bb_ev.bottleneck_s, rel=1e-9)
+        assert sol.latency_s <= bb_ev.latency_s * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------- #
+# exact-label fields on packs
+# --------------------------------------------------------------------- #
+def test_label_pack_fills_exact_fields(oracle):
+    rng = np.random.default_rng(3)
+    graphs = [sample_dag(rng, n=int(rng.integers(5, 15)), deg=2)
+              for _ in range(6)]
+    batch = pack_padded(graphs)
+    assert not batch.has_exact
+    labeled = oracle.label_pack(batch, 4)
+    assert labeled.has_exact
+    assert labeled.exact_assign.shape == (6, batch.bucket_n)
+    assert labeled.exact_bottleneck.shape == (6,)
+    ea = np.asarray(labeled.exact_assign)
+    for i, g in enumerate(graphs):
+        host, dp_bneck = exact_dp(g, 4)
+        assert np.array_equal(ea[i, : g.n], host), i
+        assert np.all(ea[i, g.n:] == 0), "exact labels must be 0 past n_valid"
+        assert float(labeled.exact_bottleneck[i]) == pytest.approx(
+            dp_bneck, rel=1e-5)    # f32 DP objective vs f64 host
+
+
+def test_label_pack_survives_batch_padding(oracle):
+    rng = np.random.default_rng(4)
+    graphs = [sample_dag(rng, n=10, deg=2) for _ in range(3)]
+    labeled = oracle.label_pack(pack_padded(graphs), 3)
+    padded = labeled.pad_batch(8)
+    assert padded.exact_assign.shape[0] == 8
+    assert padded.exact_bottleneck.shape[0] == 8
+    assert np.array_equal(np.asarray(padded.exact_assign[:3]),
+                          np.asarray(labeled.exact_assign))
+    assert np.all(np.asarray(padded.exact_assign[3:]) == 0)
+    assert np.all(np.asarray(padded.exact_bottleneck[3:]) == 0.0)
+
+
+# --------------------------------------------------------------------- #
+# (b) everything the runner scores is valid and >= the true optimum
+# --------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def small_grid_results():
+    """A bb-refined mini-grid through the real runner: every graph small
+    enough that the reported optimum is the TRUE monotone optimum."""
+    sched = RespectScheduler.init(seed=0, hidden=32)
+    scenarios = [
+        Scenario(name="chain/k3", family="chain", n_stages=3,
+                 sizes=(6, 9), graphs_per_size=2, seed=11),
+        Scenario(name="layered/k4", family="layered", n_stages=4,
+                 sizes=(8, 10), graphs_per_size=2, seed=12),
+        Scenario(name="branchy/k4", family="branchy", n_stages=4,
+                 sizes=(8, 11), graphs_per_size=2, seed=13),
+    ]
+    return run_grid(scenarios, sched, bb_max_n=12, bb_budget_s=5.0)
+
+
+def test_runner_schedules_valid_and_never_below_optimum(small_grid_results):
+    res = small_grid_results
+    assert res["all_schedules_valid"]
+    for name, agg in res["aggregate"].items():
+        assert agg["below_refined_optimum"] == 0, name
+        assert agg["gap_min"] >= -1e-9, name
+    assert check_results(res) == []
+
+
+def test_runner_oracle_parity_on_grid(small_grid_results):
+    assert small_grid_results["oracle_parity"]
+    for rec in small_grid_results["scenarios"]:
+        assert rec["oracle"]["parity"], rec["name"]
+        # every graph here is <= 12 nodes, so all were bb-refined
+        assert rec["oracle"]["bb_refined"] == rec["n_graphs"]
+
+
+def test_runner_respect_on_chains_is_optimal(small_grid_results):
+    """A chain has exactly one topological order, so decode order is
+    irrelevant and rho's optimal segmentation == the exact optimum:
+    the RL policy must match 100% regardless of weights."""
+    chain = next(r for r in small_grid_results["scenarios"]
+                 if r["family"] == "chain")
+    assert chain["policies"]["respect"]["match_rate"] == 1.0
+
+
+def test_report_summary_flat_guard_keys(small_grid_results):
+    summary = summarize(small_grid_results, {"smoke": True})
+    for key in ("oracle_parity", "all_schedules_valid",
+                "speedup_oracle_batched", "speedup_respect_vs_exact",
+                "match_rate_respect", "gap_mean_respect", "gap_p95_respect",
+                "match_rate_compiler", "match_rate_list"):
+        assert key in summary, key
+    # raw per-graph gap lists are runner-internal, never in the artifact
+    for rec in summary["scenarios"]:
+        for pol in rec["policies"].values():
+            assert "_gaps" not in pol
+    import json
+    json.dumps(summary)     # artifact must be JSON-serializable
+
+
+# --------------------------------------------------------------------- #
+# scenario families + shared pools
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("family,check", [
+    ("chain", lambda g: g.max_in_degree == 1 and g.depth == g.n),
+    ("layered", lambda g: g.max_in_degree <= 4),
+    ("branchy", lambda g: g.max_in_degree >= 3),
+])
+def test_synthetic_family_structure(family, check):
+    for i in range(8):
+        rng = np.random.default_rng((17, i))
+        g = synthetic_dag(family, rng, int(rng.integers(8, 25)))
+        assert check(g), (family, i)
+        assert g.max_in_degree <= MAX_DEG     # packs under repo max_deg
+
+
+def test_scenario_build_is_deterministic():
+    sc = Scenario(name="branchy/k4", family="branchy", n_stages=4,
+                  sizes=(8, 12), graphs_per_size=2, seed=5)
+    h1 = [g.content_hash() for g in sc.build()]
+    h2 = [g.content_hash() for g in sc.build()]
+    assert h1 == h2
+
+
+def test_scenario_grid_covers_families_stages_and_table1():
+    grid = scenario_grid(smoke=True)
+    families = {sc.family for sc in grid}
+    assert families == {"chain", "layered", "branchy", "dnn", "traffic"}
+    ks = {sc.n_stages for sc in grid if sc.family not in ("dnn", "traffic")}
+    assert min(ks) == 2 and max(ks) == 8
+    dnn = [sc for sc in grid if sc.family == "dnn"]
+    assert len(dnn[0].build()) == 10          # all ten Table-I graphs
+
+
+def test_traffic_pool_shared_between_eval_and_serving_bench():
+    """The serving bench and the eval grid's traffic scenario must score
+    the same graphs: same builder, same seed, same hashes."""
+    from benchmarks.common import traffic_pool as bench_pool
+    pool_a, n_synth, _ = traffic_pool(True, np.random.default_rng(0))
+    pool_b, _, _ = bench_pool(True, np.random.default_rng(0))
+    sc = Scenario(name="traffic/k4", family="traffic", n_stages=4,
+                  seed=0, smoke=True)
+    pool_c = sc.build()
+    ha = [g.content_hash() for g in pool_a]
+    assert ha == [g.content_hash() for g in pool_b]
+    assert ha == [g.content_hash() for g in pool_c]
+    assert len(pool_a) == n_synth

@@ -16,7 +16,13 @@ instances:
   repeated evaluation is bit-stable;
 * **pad-invariance of decode** — the greedy pointer decode of a graph
   padded to any bucket equals the unpadded decode on the valid prefix,
-  with exactly zero log-prob/entropy contributed by pad steps.
+  with exactly zero log-prob/entropy contributed by pad steps;
+* **gap-to-optimal soundness** (oracle-backed, n <= 12) — a repaired
+  schedule from ANY starting assignment, and the deployed
+  decode -> rho -> repair pipeline, never cost less than the true
+  monotone optimum (``exact_bb``, cross-checked against the batched
+  device oracle), and the segmentation the policy deploys is never
+  worse than the trivial everything-in-one-stage placement.
 
 Runs under real ``hypothesis`` when installed, and under the seeded
 deterministic stub (``tests/_hypothesis_stub.py``) offline — the
@@ -31,11 +37,13 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core import CompGraph, ptrnet, repair, rho, sample_dag, validate_monotone
+from repro.core import (CompGraph, exact_bb, evaluate_schedule, ptrnet,
+                        repair, rho, sample_dag, validate_monotone)
 from repro.core.batching import bucket_for
 from repro.core.costmodel import PipelineSystem
 from repro.core.embedding import embed_dim, embed_graph
 from repro.core.segment import rho_dp_jax
+from repro.eval import ExactOracle
 
 MAX_DEG = 6
 
@@ -149,3 +157,67 @@ def test_greedy_decode_pad_invariant(case, double_bucket):
                                np.asarray(lp_pad)[: g.n], atol=1e-6)
     assert float(jnp.abs(lp_pad[g.n:]).sum()) == 0.0
     assert float(jnp.abs(ent_pad[g.n:]).sum()) == 0.0
+
+
+# --------------------------------------------------------------------- #
+# gap-to-optimal: oracle-backed soundness on n <= 12 graphs
+# --------------------------------------------------------------------- #
+_ORACLE = ExactOracle()
+
+
+def _true_monotone_optimum(g: CompGraph, n_stages: int,
+                           system: PipelineSystem) -> float:
+    """exact_bb's optimum, cross-checked against the batched device
+    oracle: the DP (contiguous) bottleneck can never be below the bb
+    (all-monotone) bottleneck, and on these sizes bb is exact."""
+    a, _ = exact_bb(g, n_stages, system, time_budget_s=5.0)
+    opt = evaluate_schedule(g, a, system).bottleneck_s
+    dp = _ORACLE.solve(g, n_stages, system).bottleneck_s
+    assert dp >= opt * (1 - 1e-9), "device DP below the monotone optimum"
+    return opt
+
+
+@settings(max_examples=10, deadline=None)
+@given(dag_cases(min_n=6, max_n=12))
+def test_repair_from_any_start_never_beats_optimum(case):
+    """The deployment repair maps arbitrary assignments into the valid
+    monotone set — so its output can tie, but never beat, the exact
+    monotone optimum.  A violation means the oracle (or repair) is
+    unsound."""
+    g, n_stages, seed = case
+    system = PipelineSystem(n_stages)
+    start = np.random.default_rng(seed).integers(0, n_stages, size=g.n)
+    fixed = repair(g, start, n_stages)
+    assert validate_monotone(g, fixed, n_stages)
+    got = evaluate_schedule(g, fixed, system).bottleneck_s
+    opt = _true_monotone_optimum(g, n_stages, system)
+    assert got >= opt * (1 - 1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dag_cases(min_n=6, max_n=12))
+def test_decode_rho_gap_to_optimal_bounded(case):
+    """The deployed pipeline (greedy decode -> rho -> repair) stays
+    inside sound gap-to-optimal bounds: never below the exact monotone
+    optimum, and the segmentation rho picks is never worse than the
+    trivial everything-in-stage-0 placement (which is always among
+    rho's candidate cuts)."""
+    g, n_stages, seed = case
+    system = PipelineSystem(n_stages)
+    feats = jnp.asarray(embed_graph(g, MAX_DEG))
+    pmat = jnp.asarray(g.parent_matrix(MAX_DEG))
+    order, _, _ = ptrnet.greedy_order(_PARAMS, feats, pmat)
+    order = np.asarray(order, dtype=np.int64)
+
+    seg = rho(g, order, n_stages, system)
+    one_stage = evaluate_schedule(
+        g, np.zeros(g.n, dtype=np.int64), system).bottleneck_s
+    seg_b = evaluate_schedule(g, seg, system).bottleneck_s
+    assert seg_b <= one_stage * (1 + 1e-9), (
+        "rho picked a segmentation worse than the single-stage placement")
+
+    deployed = repair(g, seg, n_stages)
+    assert validate_monotone(g, deployed, n_stages)
+    got = evaluate_schedule(g, deployed, system).bottleneck_s
+    opt = _true_monotone_optimum(g, n_stages, system)
+    assert got >= opt * (1 - 1e-9), "deployed schedule below the optimum"
