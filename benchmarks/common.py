@@ -47,14 +47,17 @@ def emit(name: str, us_per_call: float, derived: str) -> str:
 
 
 def load_agent():
-    """The trained RESPECT agent if present, else fresh weights.
+    """(scheduler, trained) — the agent every bench scores.
 
-    Looks for the checkpoint-manager directory format first (what
-    ``examples/train_respect.py`` writes now), then the legacy flat
-    ``.npz`` that older training runs produced."""
+    Precedence: a local training output under ``artifacts/`` (a dev
+    override — your own ``examples/train_respect.py`` run wins on your
+    box), then the checked-in **trained release checkpoint**
+    (``checkpoints/respect-v*``, integrity-verified — what CI and fresh
+    clones get), then seeded untrained weights with a warning."""
     from repro.core import RespectScheduler
     for path in (Path("artifacts/respect_agent"),
                  Path("artifacts/respect_agent.npz")):
         if path.exists():
             return RespectScheduler.load(path), True
-    return RespectScheduler.init(seed=0), False
+    sched = RespectScheduler.from_release()   # warns on seeded fallback
+    return sched, sched.release is not None

@@ -5,12 +5,18 @@ Sweeps the :mod:`repro.eval` scenario grid — synthetic families
 Table-I DNN graphs × the shared serving-traffic pool — scoring the RL
 policy, the compiler emulation and list scheduling against the batched
 device-side exact oracle (host-parity-checked per scenario, bb-refined
-to the true monotone optimum on small graphs).
+to the true monotone optimum on small graphs), PLUS the large-graph
+**generalization tier** (:mod:`repro.eval.generalization`): |V| =
+100-500 graphs — far beyond the trained release's |V| <= 50 curriculum —
+scored differentially against the exact-DP-refined best-known reference
+and the list/compiler baselines (``--gen-only`` runs just this tier;
+``--no-gen`` skips it).
 
-Writes ``BENCH_eval.json`` (checked in; ``scripts/check_bench_regression.py
---eval-fresh/--eval-baseline`` guards the match-rate/gap tables against it
-and hard-fails on oracle-parity or schedule-validity loss — see the
-``eval-smoke`` CI job).
+Writes ``BENCH_eval.json`` (checked in, pinned with the TRAINED release
+agent; ``scripts/check_bench_regression.py --eval-fresh/--eval-baseline``
+guards the match-rate/gap/generalization tables against it and
+hard-fails on oracle-parity, schedule-validity or trained-agent-flag
+drift — see the ``bench`` CI matrix).
 """
 
 from __future__ import annotations
@@ -21,8 +27,10 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.eval import (check_results, emit_lines, run_grid,  # noqa: E402
-                        scenario_grid, write_report)
+from repro.eval import (check_generalization, check_results,  # noqa: E402
+                        emit_lines, run_generalization, run_grid,
+                        scenario_grid, summarize_generalization,
+                        write_report)
 
 from .common import emit, load_agent  # noqa: E402
 
@@ -30,28 +38,66 @@ BB_MAX_N = 12          # bb-refine the optimum on graphs up to this size
 BB_BUDGET_S = 2.0
 
 
+def _emit_gen(gen: dict) -> None:
+    for rec in gen["scenarios"]:
+        for name, pol in rec["policies"].items():
+            emit(f"{rec['name']}/{name}",
+                 pol["t_s"] / max(rec["n_graphs"], 1) * 1e6,
+                 f"gap_mean={pol['gap_mean']:.4f};"
+                 f"gap_p95={pol['gap_p95']:.4f};valid={pol['all_valid']}")
+    emit("gen/aggregate", 0.0,
+         f"n={gen['n_graphs']};"
+         f"respect_gap={gen['aggregate']['respect']['gap_mean']:.4f};"
+         f"list_gap={gen['aggregate']['list']['gap_mean']:.4f};"
+         f"compiler_gap={gen['aggregate']['compiler']['gap_mean']:.4f};"
+         f"beats_list={gen['gen_respect_beats_list']};"
+         f"beats_compiler={gen['gen_respect_beats_compiler']};"
+         f"valid={gen['gen_all_valid']}")
+
+
 def run(smoke: bool = False, out_json: str | Path | None = None,
-        check: bool = False):
+        check: bool = False, gen: bool = True, gen_only: bool = False):
     sched, trained = load_agent()
-    scenarios = scenario_grid(smoke=smoke)
-    results = run_grid(scenarios, sched, bb_max_n=BB_MAX_N,
-                       bb_budget_s=BB_BUDGET_S)
-    emit_lines(results, emit)
-    summary = None
     meta = {"smoke": smoke, "trained_agent": trained,
-            "bb_max_n": BB_MAX_N,
-            "n_scenarios": len(scenarios)}
-    if out_json is not None:
-        summary = write_report(results, out_json, meta)
-        print(f"# wrote {out_json}")
-    problems = check_results(results)
+            "bb_max_n": BB_MAX_N}
+    problems: list[str] = []
+    summary = None
+
+    gen_results = None
+    if gen or gen_only:
+        gen_results = run_generalization(sched, smoke=smoke)
+        _emit_gen(gen_results)
+        problems += check_generalization(gen_results)
+
+    if gen_only:
+        if out_json is not None:
+            import json
+            payload = dict(meta)
+            payload.update(summarize_generalization(gen_results))
+            Path(out_json).write_text(json.dumps(payload, indent=1) + "\n")
+            print(f"# wrote {out_json}")
+            summary = payload
+    else:
+        scenarios = scenario_grid(smoke=smoke)
+        meta["n_scenarios"] = len(scenarios)
+        results = run_grid(scenarios, sched, bb_max_n=BB_MAX_N,
+                           bb_budget_s=BB_BUDGET_S)
+        emit_lines(results, emit)
+        problems += check_results(results)
+        if out_json is not None:
+            summary = write_report(results, out_json, meta,
+                                   generalization=gen_results)
+            print(f"# wrote {out_json}")
+        else:
+            summary = results
+
     if check:
         for p in problems:
             print(f"# eval check FAIL: {p}")
         print(f"# eval check: {'OK' if not problems else 'FAIL'}")
         if problems:
             raise SystemExit(1)
-    return summary if summary is not None else results
+    return summary
 
 
 def main() -> int:
@@ -62,10 +108,18 @@ def main() -> int:
     ap.add_argument("--out-json", default=None)
     ap.add_argument("--check", action="store_true",
                     help="exit 1 on oracle-parity loss, an invalid scored "
-                         "schedule, or a schedule below the refined optimum")
+                         "schedule, a schedule below the refined optimum, "
+                         "or a generalization-tier failure")
+    ap.add_argument("--gen-only", action="store_true",
+                    help="run ONLY the large-graph generalization tier "
+                         "(the CI generalization smoke row)")
+    ap.add_argument("--no-gen", action="store_true",
+                    help="skip the generalization tier")
     args = ap.parse_args()
-    out = args.out_json or ("BENCH_eval.json" if args.smoke else None)
-    run(smoke=args.smoke, out_json=out, check=args.check)
+    out = args.out_json or ("BENCH_eval.json"
+                            if args.smoke and not args.gen_only else None)
+    run(smoke=args.smoke, out_json=out, check=args.check,
+        gen=not args.no_gen, gen_only=args.gen_only)
     return 0
 
 

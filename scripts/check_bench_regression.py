@@ -22,7 +22,7 @@ import sys
 from pathlib import Path
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("fresh", nargs="?", default=None,
                     help="smoke summary json from this run (omit for a "
@@ -61,7 +61,21 @@ def main() -> int:
                          "flags")
     ap.add_argument("--eval-baseline", default=None,
                     help="checked-in BENCH_eval.json baseline")
-    args = ap.parse_args()
+    ap.add_argument("--gen-only", action="store_true",
+                    help="the fresh eval artifact carries only the "
+                         "generalization tier (eval_grid --gen-only): "
+                         "guard the gen_* keys and skip the small-grid "
+                         "tables")
+    ap.add_argument("--min-match-rate", type=float, default=None,
+                    help="ABSOLUTE floor on match_rate_respect (the "
+                         "ratchet: floors only go up — set from the "
+                         "trained release's pinned quality, never lowered "
+                         "to merge)")
+    ap.add_argument("--min-table1-matches", type=int, default=None,
+                    help="ABSOLUTE floor on table1_matches_k4 (how many "
+                         "of the ten Table-I models the policy must "
+                         "schedule optimally at k=4)")
+    args = ap.parse_args(argv)
     metrics = args.metric or ["speedup_traffic"]
     if (args.fresh is None and args.train_fresh is None
             and args.traffic_fresh is None and args.eval_fresh is None):
@@ -123,63 +137,104 @@ def main() -> int:
         ef = json.loads(Path(args.eval_fresh).read_text())
         eb = (json.loads(Path(args.eval_baseline).read_text())
               if args.eval_baseline else {})
-        # the quality tables are only comparable between runs of the SAME
-        # agent: the baseline is pinned with the seeded fallback weights
-        # (reproducible anywhere), and a box with a trained checkpoint in
-        # artifacts/ would produce different (better) tables — that is
-        # not a regression signal either way, so skip the ratio guards
-        # and keep only the hard correctness flags
-        same_agent = ("trained_agent" not in eb
-                      or ef.get("trained_agent") == eb.get("trained_agent"))
-        if not same_agent:
-            print("[guard] SKIP eval quality tables: fresh trained_agent="
-                  f"{ef.get('trained_agent')} != baseline "
-                  f"{eb.get('trained_agent')} (different agents are not "
-                  "comparable)")
-        # quality floors: match rates must not collapse (ratio guard, like
-        # the throughput metrics — a match rate is a rate, so the relative
-        # floor transfers across machines)
-        for m in (("match_rate_respect", "match_rate_compiler",
-                   "match_rate_list") if same_agent else ()):
-            guard_ratio(ef, eb, m)
-        # gap ceilings: LOWER is better, so the guard inverts — fail when
-        # the fresh gap exceeds baseline / min-ratio (plus a small absolute
-        # slack so a 0.0 baseline doesn't demand exact zeros forever)
-        for m in (("gap_p95_respect", "gap_mean_respect")
-                  if same_agent else ()):
+
+        def guard_gap_ceiling(m):
+            # gap ceilings: LOWER is better, so the guard inverts — fail
+            # when the fresh gap exceeds baseline / min-ratio (plus a small
+            # absolute slack so a 0.0 baseline doesn't demand exact zeros
+            # forever).  Relax in the right direction whatever the
+            # baseline's sign: gaps can be legitimately negative, and
+            # baseline/min_ratio would TIGHTEN a negative ceiling instead
+            # of relaxing it.
+            nonlocal failed
             if m not in eb:
                 print(f"[guard] SKIP {m}: not in baseline")
-                continue
+                return
             if m not in ef:
                 print(f"[guard] FAIL {m}: missing from fresh summary")
                 failed = True
-                continue
-            # relax in the right direction whatever the baseline's sign:
-            # gaps can be legitimately negative (a policy beating the
-            # unrefined contiguous reference), and baseline/min_ratio
-            # would TIGHTEN a negative ceiling instead of relaxing it
+                return
             ceiling = max(eb[m] / args.min_ratio,
                           eb[m] * args.min_ratio) + 1e-6
             status = "FAIL" if ef[m] > ceiling else "ok"
             failed |= ef[m] > ceiling
             print(f"[guard] {status:4s} {m}: fresh={ef[m]:.4f} "
                   f"baseline={eb[m]:.4f} ceiling={ceiling:.4f}")
-        # hard correctness flags: parity with the host exact solver and
-        # dependency-validity of every scored schedule are machine-
-        # independent invariants
-        for flag in ("oracle_parity", "all_schedules_valid"):
-            if ef.get(flag) is not True:
-                print(f"[guard] FAIL {flag}: eval invariant broken "
-                      f"({args.eval_fresh})")
-                failed = True
-        for name in ("respect", "compiler", "list"):
-            below = ef.get("aggregate", {}).get(name, {}).get(
-                "below_refined_optimum", 0)
-            if below:
-                print(f"[guard] FAIL below_refined_optimum[{name}]={below}: "
-                      f"schedule scored below the true monotone optimum "
-                      f"({args.eval_fresh})")
-                failed = True
+
+        # the quality tables are only comparable between runs of the SAME
+        # agent.  A trained_agent flag mismatch is a HARD failure: the
+        # baseline is pinned with the trained release checkpoint, so a
+        # fresh run that fell back to seeded weights means the checkpoint
+        # failed to load (or was deleted) — quality silently collapsing to
+        # fallback level is exactly what this guard exists to catch.  (The
+        # old behaviour — skip the quality floors on mismatch — was a
+        # migration affordance from the pre-release era, not an escape
+        # hatch; `trained_agent: false` artifacts are no longer accepted
+        # as baselines.)
+        if "trained_agent" in eb \
+                and ef.get("trained_agent") != eb.get("trained_agent"):
+            print("[guard] FAIL trained_agent: fresh="
+                  f"{ef.get('trained_agent')} != baseline "
+                  f"{eb.get('trained_agent')} — the fresh run scored a "
+                  "different agent than the pinned baseline (checkpoint "
+                  "failed to load, or the baseline needs re-pinning via "
+                  "benchmarks.eval_grid --smoke)")
+            failed = True
+        # quality floors: match rates must not collapse (ratio guard, like
+        # the throughput metrics — a match rate is a rate, so the relative
+        # floor transfers across machines)
+        if not args.gen_only:
+            for m in ("match_rate_respect", "match_rate_compiler",
+                      "match_rate_list"):
+                guard_ratio(ef, eb, m)
+            for m in ("gap_p95_respect", "gap_mean_respect"):
+                guard_gap_ceiling(m)
+            # absolute ratchet floors (floors only go up): trained-level
+            # quality, set from the pinned release
+            if args.min_match_rate is not None:
+                v = ef.get("match_rate_respect")
+                ok = v is not None and v >= args.min_match_rate
+                print(f"[guard] {'ok' if ok else 'FAIL':4s} "
+                      f"match_rate_respect >= {args.min_match_rate} "
+                      f"(absolute floor): fresh={v}")
+                failed |= not ok
+            if args.min_table1_matches is not None:
+                v = ef.get("table1_matches_k4")
+                ok = v is not None and v >= args.min_table1_matches
+                print(f"[guard] {'ok' if ok else 'FAIL':4s} "
+                      f"table1_matches_k4 >= {args.min_table1_matches} "
+                      f"(absolute floor): fresh={v}")
+                failed |= not ok
+            # hard correctness flags: parity with the host exact solver
+            # and dependency-validity of every scored schedule are
+            # machine-independent invariants
+            for flag in ("oracle_parity", "all_schedules_valid"):
+                if ef.get(flag) is not True:
+                    print(f"[guard] FAIL {flag}: eval invariant broken "
+                          f"({args.eval_fresh})")
+                    failed = True
+            for name in ("respect", "compiler", "list"):
+                below = ef.get("aggregate", {}).get(name, {}).get(
+                    "below_refined_optimum", 0)
+                if below:
+                    print(f"[guard] FAIL below_refined_optimum[{name}]="
+                          f"{below}: schedule scored below the true "
+                          f"monotone optimum ({args.eval_fresh})")
+                    failed = True
+        # large-graph generalization tier: hard flags whenever the fresh
+        # artifact carries the tier (always under --gen-only; otherwise a
+        # baseline that pins gen keys requires the fresh run to have them)
+        has_gen = "gen_gap_mean_respect" in ef or args.gen_only \
+            or "gen_gap_mean_respect" in eb
+        if has_gen:
+            for flag in ("gen_all_valid", "gen_respect_beats_list",
+                         "gen_respect_beats_compiler"):
+                if ef.get(flag) is not True:
+                    print(f"[guard] FAIL {flag}: generalization invariant "
+                          f"broken ({args.eval_fresh})")
+                    failed = True
+            guard_gap_ceiling("gen_gap_mean_respect")
+            guard_gap_ceiling("gen_gap_p95_respect")
     # exact-match flags are hard invariants, not ratios.  The smoke flags
     # compare the two serving APIs (batch-of-1 vs batch-of-N programs);
     # the serve summary carries the one vs the HOST reference pipeline;

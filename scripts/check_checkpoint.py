@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Checkpoint-integrity smoke: the CI job that proves the SHIPPED agent
+is the one everything else is pinned against.
+
+    PYTHONPATH=src python scripts/check_checkpoint.py
+
+Three layers, each cheap enough for every push:
+
+1. **integrity** — ``verify_release`` on the discovered release
+   (``checkpoints/respect-v*`` or ``$RESPECT_CHECKPOINT``): manifest
+   schema + sha256 of the parameter bytes.  A truncated buffer, a
+   bit-flip, or a hand-edited manifest fails here before it can produce
+   wrong-but-plausible schedules.
+2. **behaviour** — load the verified params into ``RespectScheduler``
+   and schedule a probe subset of the Table-I model graphs end to end
+   (embed → decode → rho → repair), asserting dependency-validity.
+3. **golden digest** — the probe schedules' order/assignment digests
+   must equal the checked-in ``tests/golden/dnn_schedules.json``, whose
+   meta must in turn pin THIS release's parameter digest.  Catches the
+   cross-artifact drift no single-file check can: a re-trained
+   checkpoint committed without re-pinning the goldens (or vice versa).
+
+Exit code 1 on any failure.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+GOLDEN_PATH = REPO / "tests" / "golden" / "dnn_schedules.json"
+N_PROBE_MODELS = 3
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro.checkpoint.release import (ReleaseError, find_release,
+                                          verify_release)
+    from repro.core import (MODEL_SPECS, RespectScheduler, build_model_graph,
+                            validate_monotone)
+    from repro.core.costmodel import PipelineSystem
+
+    path = find_release()
+    if path is None:
+        print("[ckpt] FAIL: no release checkpoint found under "
+              "checkpoints/ (or $RESPECT_CHECKPOINT)")
+        return 1
+    try:
+        params, manifest = verify_release(path)
+    except ReleaseError as e:
+        print(f"[ckpt] FAIL integrity: {e}")
+        return 1
+    print(f"[ckpt] ok integrity: {path.name} "
+          f"(sha256 {manifest['params_sha256'][:16]}..., "
+          f"version {manifest['version']})")
+
+    golden = json.loads(GOLDEN_PATH.read_text())
+    meta = golden["meta"]
+    if meta.get("params_sha256") != manifest["params_sha256"]:
+        print(f"[ckpt] FAIL golden pin: {GOLDEN_PATH.name} meta pins "
+              f"{str(meta.get('params_sha256'))[:16]}... but the release "
+              f"hashes to {manifest['params_sha256'][:16]}... — re-pin "
+              "the goldens (scripts/regen_golden.py) or restore the "
+              "matching checkpoint")
+        return 1
+    print("[ckpt] ok golden pin: release digest matches golden meta")
+
+    sched = RespectScheduler(params)
+    n_stages = meta["n_stages"]
+    system = PipelineSystem(n_stages=n_stages)
+    failed = False
+    for name in sorted(MODEL_SPECS)[:N_PROBE_MODELS]:
+        g = build_model_graph(name)
+        res = sched.schedule(g, n_stages, system, use_cache=False)
+        if not validate_monotone(g, res.assignment, n_stages):
+            print(f"[ckpt] FAIL {name}: schedule violates dependencies")
+            failed = True
+            continue
+        snap = golden["models"][name]
+        for field, arr in (("order_sha256", res["order"]),
+                           ("assign_sha256", res.assignment)):
+            d = hashlib.sha256(
+                np.asarray(arr, dtype=np.int64).tobytes()).hexdigest()
+            if d != snap[field]:
+                print(f"[ckpt] FAIL {name}: {field} {d[:12]} != golden "
+                      f"{snap[field][:12]} — shipped agent no longer "
+                      "reproduces the pinned schedules")
+                failed = True
+        if not failed:
+            print(f"[ckpt] ok probe: {name} matches golden digests")
+    if failed:
+        return 1
+    print(f"[ckpt] OK — release verified, {N_PROBE_MODELS} probe models "
+          "match the golden snapshot")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

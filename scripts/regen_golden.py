@@ -6,13 +6,14 @@
 Writes, for each of the ten Table-I ImageNet model graphs, the structure
 triple (|V|, deg(V), depth) plus a schedule snapshot — sha256 digests of
 the decoded order and the repaired assignment, and the evaluated
-bottleneck/latency — produced by a FIXED agent (``RespectScheduler.init``
-at the pinned seed/hidden below, deterministic across machines for a
-given jax version) on the default Edge-TPU pipeline system, AND the
-gap-to-optimal record against the exact solver: the optimal assignment
-digest and bottleneck (batched device oracle, parity-asserted against
-the host ``exact_dp`` at regen time), the agent's optimality gap and
-whether it matches the optimum.
+bottleneck/latency — produced by the TRAINED release agent
+(``RespectScheduler.from_release()``: the newest integrity-verified
+``checkpoints/respect-v*``, whose parameter sha256 the golden meta pins,
+so the snapshot can never silently drift to a different agent) on the
+default Edge-TPU pipeline system, AND the gap-to-optimal record against
+the exact solver: the optimal assignment digest and bottleneck (batched
+device oracle, parity-asserted against the host ``exact_dp`` at regen
+time), the agent's optimality gap and whether it matches the optimum.
 
 ``tests/test_dnn_golden.py`` diffs live schedules against this file — and
 re-renders the whole payload in-process to assert it round-trips
@@ -33,8 +34,6 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 # the pinned golden configuration — bump deliberately, never implicitly
-SEED = 0
-HIDDEN = 64
 N_STAGES = 4
 
 
@@ -56,7 +55,12 @@ def build_payload() -> dict:
     from repro.core.costmodel import PipelineSystem
     from repro.eval import ExactOracle
 
-    sched = RespectScheduler.init(seed=SEED, hidden=HIDDEN)
+    sched = RespectScheduler.from_release()
+    if sched.release is None:
+        raise SystemExit(
+            "regen_golden: no trained release checkpoint found — the "
+            "golden snapshot is pinned against checkpoints/respect-v*; "
+            "train one with scripts/train_release.py first")
     system = PipelineSystem(n_stages=N_STAGES)
     graphs = {name: build_model_graph(name) for name in MODEL_SPECS}
     results = sched.schedule_many(list(graphs.values()), N_STAGES, system,
@@ -90,7 +94,10 @@ def build_payload() -> dict:
         }
 
     return {
-        "meta": {"seed": SEED, "hidden": HIDDEN, "n_stages": N_STAGES,
+        "meta": {"agent": "release",
+                 "release_version": sched.release["version"],
+                 "params_sha256": sched.release["params_sha256"],
+                 "n_stages": N_STAGES,
                  "system": "PipelineSystem(n_stages=4) defaults"},
         "models": models,
     }

@@ -1,2 +1,4 @@
 from .manager import (CheckpointManager, save_pytree, load_pytree,  # noqa: F401
                       load_pytree_dict, is_checkpoint_dir)
+from .release import (ReleaseError, params_sha256, write_release,  # noqa: F401
+                      verify_release, find_release, load_release_params)

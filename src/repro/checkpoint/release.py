@@ -1,0 +1,186 @@
+"""Versioned release checkpoints for the trained RESPECT agent.
+
+A *release* is a small, checked-in directory that makes the trained
+policy a first-class, integrity-guarded artifact instead of a loose
+params dump:
+
+    checkpoints/respect-v1/
+        release.json        # manifest: version, config, training
+                            # provenance (data seed, curriculum, git sha),
+                            # sha256 of the parameter bytes, eval metrics
+        params/             # repro.checkpoint.save_pytree directory
+            manifest.json
+            arr_0000.bin ...
+
+``verify_release`` recomputes the parameter digest from the stored
+buffers and validates the manifest schema, so a truncated / bit-flipped
+/ hand-edited checkpoint is rejected *before* it can silently produce
+wrong-but-plausible schedules (the CI checkpoint-integrity job runs
+exactly this check plus a golden-digest probe on every push).
+
+Discovery: :func:`find_release` returns the newest ``respect-v*``
+release under the repo's ``checkpoints/`` directory (or
+``$RESPECT_CHECKPOINT`` when set — point it at a specific release dir to
+pin one, or at an empty/missing path to force the seeded fallback).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+import warnings
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from .manager import is_checkpoint_dir, load_pytree_dict, save_pytree
+
+__all__ = [
+    "ReleaseError",
+    "params_sha256",
+    "write_release",
+    "verify_release",
+    "find_release",
+    "load_release_params",
+    "RELEASE_MANIFEST",
+    "REQUIRED_MANIFEST_KEYS",
+]
+
+RELEASE_MANIFEST = "release.json"
+PARAMS_SUBDIR = "params"
+# schema floor: a release manifest without these keys is rejected — the
+# guard and the loaders rely on them
+REQUIRED_MANIFEST_KEYS = ("schema_version", "version", "params_sha256",
+                          "config", "train")
+_VERSION_RE = re.compile(r"^respect-v(\d+)$")
+
+
+class ReleaseError(RuntimeError):
+    """A release checkpoint failed schema or integrity verification."""
+
+
+def params_sha256(params) -> str:
+    """Deterministic digest of a parameter pytree: sha256 over the sorted
+    (leaf-name, dtype, shape, raw bytes) stream — independent of dict
+    insertion order and of whether leaves live on host or device."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    items = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        items.append((name, np.asarray(jax.device_get(leaf))))
+    h = hashlib.sha256()
+    for name, arr in sorted(items, key=lambda kv: kv[0]):
+        h.update(name.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(tuple(arr.shape)).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def write_release(params, directory: str | Path, meta: dict) -> dict:
+    """Write a release checkpoint: params (manager directory format) +
+    ``release.json`` with the digest stamped in.  ``meta`` must carry
+    ``version``, ``config`` and ``train``; returns the full manifest."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    manifest = dict(meta)
+    manifest.setdefault("schema_version", 1)
+    manifest["params_sha256"] = params_sha256(params)
+    missing = [k for k in REQUIRED_MANIFEST_KEYS if k not in manifest]
+    if missing:
+        raise ReleaseError(f"release meta missing keys: {missing}")
+    save_pytree(params, directory / PARAMS_SUBDIR)
+    (directory / RELEASE_MANIFEST).write_text(
+        json.dumps(manifest, indent=1, sort_keys=True) + "\n")
+    return manifest
+
+
+def verify_release(directory: str | Path) -> tuple[dict, dict]:
+    """Load and integrity-check one release; returns (params, manifest).
+
+    Raises :class:`ReleaseError` when the manifest is missing/ill-formed,
+    the params directory is unreadable, or the recomputed parameter
+    digest does not match the manifest — i.e. on any corruption or
+    hand-edit of the checked-in artifact.
+    """
+    directory = Path(directory)
+    mpath = directory / RELEASE_MANIFEST
+    if not mpath.exists():
+        raise ReleaseError(f"no {RELEASE_MANIFEST} under {directory}")
+    try:
+        manifest = json.loads(mpath.read_text())
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ReleaseError(f"unparseable {mpath}: {e}") from e
+    missing = [k for k in REQUIRED_MANIFEST_KEYS if k not in manifest]
+    if missing:
+        raise ReleaseError(f"{mpath} missing required keys: {missing}")
+    pdir = directory / PARAMS_SUBDIR
+    if not is_checkpoint_dir(pdir):
+        raise ReleaseError(f"{pdir} is not a checkpoint directory")
+    try:
+        params = load_pytree_dict(pdir)
+    except Exception as e:   # truncated buffer, bad manifest entry, ...
+        raise ReleaseError(f"unreadable params under {pdir}: {e}") from e
+    digest = params_sha256(params)
+    if digest != manifest["params_sha256"]:
+        raise ReleaseError(
+            f"params digest mismatch under {directory}: manifest pins "
+            f"{manifest['params_sha256'][:16]}..., stored buffers hash to "
+            f"{digest[:16]}... — the checkpoint is corrupt or was edited "
+            "without re-releasing")
+    return params, manifest
+
+
+def _default_root() -> Path:
+    # src/repro/checkpoint/release.py -> repo root (editable install; a
+    # site-packages install can still point RESPECT_CHECKPOINT anywhere)
+    return Path(__file__).resolve().parents[3] / "checkpoints"
+
+
+def find_release(root: str | Path | None = None) -> Path | None:
+    """Newest ``respect-v<N>`` release directory, or None.
+
+    ``$RESPECT_CHECKPOINT`` overrides discovery entirely: set it to a
+    release directory to pin that one, or to a non-existent path to
+    force the seeded fallback (useful for A/B-ing the untrained agent).
+    """
+    import os
+    env = os.environ.get("RESPECT_CHECKPOINT")
+    if env is not None:
+        p = Path(env)
+        return p if (p / RELEASE_MANIFEST).exists() else None
+    root = Path(root) if root is not None else _default_root()
+    if not root.exists():
+        return None
+    best: tuple[int, Path] | None = None
+    for p in root.iterdir():
+        m = _VERSION_RE.match(p.name)
+        if m and (p / RELEASE_MANIFEST).exists():
+            v = int(m.group(1))
+            if best is None or v > best[0]:
+                best = (v, p)
+    return None if best is None else best[1]
+
+
+def load_release_params(path: str | Path | None = None,
+                        root: str | Path | None = None):
+    """(params, manifest) for ``path`` or the newest discovered release;
+    (None, None) when no release exists.  An *existing but corrupt*
+    release raises — silent fallback would mask exactly the drift the
+    integrity job exists to catch."""
+    if path is None:
+        path = find_release(root)
+        if path is None:
+            return None, None
+    return verify_release(path)
+
+
+def warn_no_release(context: str) -> None:
+    warnings.warn(
+        f"{context}: no trained release checkpoint found under "
+        "checkpoints/ (or $RESPECT_CHECKPOINT) — falling back to the "
+        "seeded untrained agent.  Train one with "
+        "scripts/train_release.py.", RuntimeWarning, stacklevel=3)

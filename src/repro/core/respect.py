@@ -62,6 +62,9 @@ class RespectScheduler:
                  cache_size: int = 1024, logits_impl: str | None = None,
                  max_compiled: int = 16):
         self.params = params
+        #: release manifest dict when the params came from a verified
+        #: trained release checkpoint (see :meth:`from_release`), else None
+        self.release: dict | None = None
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
         self._decoder = BucketedDecoder(
@@ -112,6 +115,30 @@ class RespectScheduler:
                 d = d.setdefault(p, {})
             d[parts[-1]] = jnp.asarray(data[key])
         return cls(params, **kw)
+
+    @classmethod
+    def from_release(cls, path: str | Path | None = None,
+                     fallback_seed: int = 0, **kw) -> "RespectScheduler":
+        """The DEFAULT deployment constructor: load the trained release
+        checkpoint (``checkpoints/respect-v*``, integrity-verified — see
+        :mod:`repro.checkpoint.release`) when one exists, else warn and
+        fall back to seeded untrained weights.
+
+        ``path``: a specific release directory (then it MUST verify —
+        corruption raises instead of silently downgrading quality).
+        ``sched.release`` carries the manifest when trained, else None.
+        """
+        from ..checkpoint.release import load_release_params, warn_no_release
+        params, manifest = load_release_params(path)
+        if params is None:
+            warn_no_release("RespectScheduler.from_release")
+            return cls.init(seed=fallback_seed, **kw)
+        cfg = manifest.get("config", {})
+        kw.setdefault("mask_infeasible", cfg.get("mask_infeasible", True))
+        kw.setdefault("max_deg", cfg.get("max_deg", 6))
+        sched = cls(params, **kw)
+        sched.release = manifest
+        return sched
 
     # ------------------------------------------------------------------ #
     def order(self, graph: CompGraph) -> np.ndarray:

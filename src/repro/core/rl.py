@@ -456,6 +456,14 @@ class RLTrainer:
     ``shard_map`` (pure data parallelism: per-device microbatches,
     psum-reduced grads, replicated params).  ``save``/``restore`` go
     through :class:`repro.checkpoint.manager.CheckpointManager`.
+
+    Multi-stage training: the pointer policy emits an *order* — only the
+    reward (rho of that order vs the exact label at a given stage count)
+    depends on ``n_stages`` — so ONE parameter set trains against many
+    stage counts.  Pass ``stage_counts=(2, 3, 4, 6, 8)`` and rotate:
+    ``train_step(batch, key, n_stages=k)`` builds (and caches) one jitted
+    step per k over the same TrainState; the release pipeline uses this
+    to train the shipped agent across the whole eval-grid stage range.
     """
 
     def __init__(
@@ -469,12 +477,17 @@ class RLTrainer:
         entropy_coef: float = 0.0,
         seed: int = 0,
         n_devices: int | None = None,
+        stage_counts: tuple[int, ...] | None = None,
     ):
         from .embedding import embed_dim
-        self.n_stages = n_stages
-        self.system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        self.stage_counts = tuple(stage_counts) if stage_counts else (n_stages,)
+        self.n_stages = self.stage_counts[0] if stage_counts else n_stages
+        self._base_system = system or PipelineSystem(self.n_stages)
+        self.system = self._base_system.with_stages(self.n_stages)
         self.optimizer = optim.adamw(lr=lr)
         self.hidden = hidden
+        self.mask_infeasible = mask_infeasible
+        self.entropy_coef = entropy_coef
         feat_dim = feat_dim or embed_dim()
         self.mesh = None
         if n_devices is not None and n_devices > 1:
@@ -482,11 +495,24 @@ class RLTrainer:
             self.mesh = data_parallel_mesh(n_devices)
         self.state = init_train_state(
             jax.random.PRNGKey(seed), feat_dim, hidden, self.optimizer)
-        self._train_step = make_train_step(
-            n_stages, self.system, self.optimizer, mask_infeasible,
-            entropy_coef, mesh=self.mesh)
-        self._eval_fn = make_eval_fn(n_stages, self.system, mask_infeasible)
+        # one jitted train/eval fn per stage count, built lazily — every k
+        # shares the single TrainState (params, Adam moments, baseline)
+        self._train_steps: dict[int, Any] = {}
+        self._eval_fns: dict[int, Any] = {}
         self._ckpt_managers: dict = {}
+
+    def _step_fn(self, k: int):
+        if k not in self._train_steps:
+            self._train_steps[k] = make_train_step(
+                k, self._base_system.with_stages(k), self.optimizer,
+                self.mask_infeasible, self.entropy_coef, mesh=self.mesh)
+        return self._train_steps[k]
+
+    def _eval_fn_for(self, k: int):
+        if k not in self._eval_fns:
+            self._eval_fns[k] = make_eval_fn(
+                k, self._base_system.with_stages(k), self.mask_infeasible)
+        return self._eval_fns[k]
 
     # -- state views ---------------------------------------------------- #
     @property
@@ -506,11 +532,12 @@ class RLTrainer:
         return int(self.state.step)
 
     # -- training ------------------------------------------------------- #
-    def train_step(self, batch: PaddedGraphBatch, key) -> dict:
+    def train_step(self, batch: PaddedGraphBatch, key,
+                   n_stages: int | None = None) -> dict:
         if not batch.has_labels:
             raise ValueError("training batch carries no labels; pack with "
                              "rl.pack_graphs / DagSampler.next_packed_batch")
-        params, opt_state, metrics = self._train_step(
+        params, opt_state, metrics = self._step_fn(n_stages or self.n_stages)(
             self.state.params, self.state.baseline_params,
             self.state.opt_state, batch, key)
         self.state = dataclasses.replace(
@@ -518,21 +545,30 @@ class RLTrainer:
             step=self.state.step + 1)
         return {k: float(v) for k, v in metrics.items()}
 
-    def evaluate(self, batch: PaddedGraphBatch) -> dict:
+    def evaluate(self, batch: PaddedGraphBatch,
+                 n_stages: int | None = None) -> dict:
+        fn = self._eval_fn_for(n_stages or self.n_stages)
         return {k: float(v)
-                for k, v in self._eval_fn(self.state.params, batch).items()}
+                for k, v in fn(self.state.params, batch).items()}
 
-    def maybe_update_baseline(self, eval_batch: PaddedGraphBatch) -> bool:
-        """Rollout-baseline refresh: adopt the online policy as baseline when
-        its greedy reward beats the best seen so far."""
-        r = self.evaluate(eval_batch)["reward_greedy"]
-        if r > float(self.state.best_baseline_reward):
+    def consider_baseline(self, reward: float) -> bool:
+        """Adopt the online policy as rollout baseline when ``reward``
+        (however the caller aggregated it — single-batch greedy reward or
+        a multi-stage-count mean) beats the best seen so far."""
+        if reward > float(self.state.best_baseline_reward):
             self.state = dataclasses.replace(
                 self.state,
                 baseline_params=jax.tree.map(jnp.copy, self.state.params),
-                best_baseline_reward=jnp.float32(r))
+                best_baseline_reward=jnp.float32(reward))
             return True
         return False
+
+    def maybe_update_baseline(self, eval_batch: PaddedGraphBatch,
+                              n_stages: int | None = None) -> bool:
+        """Rollout-baseline refresh: adopt the online policy as baseline when
+        its greedy reward beats the best seen so far."""
+        return self.consider_baseline(
+            self.evaluate(eval_batch, n_stages)["reward_greedy"])
 
     # -- checkpointing -------------------------------------------------- #
     def _manager(self, ckpt_dir: str | Path):

@@ -14,8 +14,20 @@ continuously-guarded regression surface:
   and the hard correctness checks CI enforces.
 """
 
+from .generalization import (  # noqa: F401
+    GenScenario,
+    check_generalization,
+    generalization_grid,
+    run_generalization,
+)
 from .oracle import ExactOracle, OracleSolution  # noqa: F401
-from .report import check_results, emit_lines, summarize, write_report  # noqa: F401
+from .report import (  # noqa: F401
+    check_results,
+    emit_lines,
+    summarize,
+    summarize_generalization,
+    write_report,
+)
 from .runner import MATCH_RTOL, POLICY_NAMES, run_grid, run_scenario  # noqa: F401
 from .scenarios import (  # noqa: F401
     SYNTH_FAMILIES,

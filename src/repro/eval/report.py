@@ -30,8 +30,14 @@ def _strip_private(results: dict) -> dict:
     return out
 
 
-def summarize(results: dict, meta: dict | None = None) -> dict:
-    """The BENCH_eval.json payload: flat guard keys + full tables."""
+def summarize(results: dict, meta: dict | None = None,
+              generalization: dict | None = None) -> dict:
+    """The BENCH_eval.json payload: flat guard keys + full tables.
+
+    ``generalization`` (optional): a :func:`repro.eval.generalization
+    .run_generalization` record — its flat guard keys (``gen_*``) and
+    full tables ride along in the same artifact so ONE baseline pins the
+    whole quality surface."""
     out: dict = dict(meta or {})
     out["oracle_parity"] = results["oracle_parity"]
     out["all_schedules_valid"] = results["all_schedules_valid"]
@@ -56,12 +62,37 @@ def summarize(results: dict, meta: dict | None = None) -> dict:
             table1.setdefault(g["model"], {})[f"k{rec['n_stages']}"] = {
                 k: v for k, v in g.items() if k != "model"}
     out["table1"] = table1
+    # flat Table-I floor key: how many of the ten models the policy
+    # schedules optimally at k=4 (the guard ratchets this — see
+    # --min-table1-matches)
+    k4 = [m.get("k4", {}).get("respect_match") for m in table1.values()]
+    if any(v is not None for v in k4):
+        out["table1_matches_k4"] = int(sum(bool(v) for v in k4))
+    if generalization is not None:
+        out.update(summarize_generalization(generalization))
+    return out
+
+
+def summarize_generalization(gen: dict) -> dict:
+    """Flat ``gen_*`` guard keys + the full record, for merging into the
+    eval artifact (or standing alone as the ``--gen-only`` artifact)."""
+    out: dict = {}
+    for name in POLICY_NAMES:
+        agg = gen["aggregate"][name]
+        out[f"gen_gap_mean_{name}"] = agg["gap_mean"]
+        out[f"gen_gap_p95_{name}"] = agg["gap_p95"]
+    for flag in ("gen_all_valid", "gen_respect_beats_list",
+                 "gen_respect_beats_compiler"):
+        out[flag] = gen[flag]
+    out["gen_n_graphs"] = gen["n_graphs"]
+    out["generalization"] = json.loads(json.dumps(gen))
     return out
 
 
 def write_report(results: dict, path: str | Path,
-                 meta: dict | None = None) -> dict:
-    summary = summarize(results, meta)
+                 meta: dict | None = None,
+                 generalization: dict | None = None) -> dict:
+    summary = summarize(results, meta, generalization=generalization)
     Path(path).write_text(json.dumps(summary, indent=1) + "\n")
     return summary
 

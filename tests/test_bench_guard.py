@@ -1,0 +1,141 @@
+"""Regression-guard tests: ``scripts/check_bench_regression.py`` as a
+unit, driven through ``main(argv)`` with temp-file summaries.
+
+The guard is the nightly tripwire for every quality/perf artifact; these
+tests pin its failure semantics — in particular that a ``trained_agent``
+flag mismatch is a HARD failure (a fresh run silently falling back to
+seeded weights is the exact regression the release pipeline must catch),
+that the absolute ratchet floors fire, and that the generalization hard
+flags fire — so a refactor cannot quietly turn a FAIL into a SKIP.
+"""
+
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench_regression",
+    Path(__file__).parent.parent / "scripts" / "check_bench_regression.py")
+guard = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(guard)
+
+
+GOOD_EVAL = {
+    "trained_agent": True,
+    "match_rate_respect": 0.95,
+    "match_rate_compiler": 0.04,
+    "match_rate_list": 0.04,
+    "gap_mean_respect": 0.02,
+    "gap_p95_respect": 0.10,
+    "table1_matches_k4": 9,
+    "oracle_parity": True,
+    "all_schedules_valid": True,
+    "aggregate": {"respect": {"below_refined_optimum": 0},
+                  "compiler": {"below_refined_optimum": 0},
+                  "list": {"below_refined_optimum": 0}},
+    "gen_gap_mean_respect": 0.05,
+    "gen_gap_p95_respect": 0.20,
+    "gen_all_valid": True,
+    "gen_respect_beats_list": True,
+    "gen_respect_beats_compiler": True,
+}
+
+
+def run_eval_guard(tmp_path, fresh, baseline, extra=()):
+    fp = tmp_path / "fresh.json"
+    bp = tmp_path / "base.json"
+    fp.write_text(json.dumps(fresh))
+    bp.write_text(json.dumps(baseline))
+    return guard.main(["--eval-fresh", str(fp), "--eval-baseline", str(bp),
+                       *extra])
+
+
+def test_identical_summaries_pass(tmp_path):
+    assert run_eval_guard(tmp_path, GOOD_EVAL, GOOD_EVAL) == 0
+
+
+def test_trained_agent_flag_mismatch_is_hard_failure(tmp_path):
+    """Fresh run fell back to seeded weights while the baseline pins the
+    trained release: must FAIL even if every metric looks fine."""
+    fresh = dict(GOOD_EVAL, trained_agent=False)
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1
+
+
+def test_trained_agent_flag_missing_from_fresh_fails(tmp_path):
+    fresh = {k: v for k, v in GOOD_EVAL.items() if k != "trained_agent"}
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1
+
+
+def test_match_rate_collapse_fails(tmp_path):
+    fresh = dict(GOOD_EVAL, match_rate_respect=0.3)   # < 0.95 * 0.5 floor
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1
+
+
+def test_absolute_match_rate_floor(tmp_path):
+    fresh = dict(GOOD_EVAL, match_rate_respect=0.85)  # ratio guard passes
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 0
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL,
+                          ("--min-match-rate", "0.90")) == 1
+    assert run_eval_guard(tmp_path, dict(GOOD_EVAL), GOOD_EVAL,
+                          ("--min-match-rate", "0.90")) == 0
+
+
+def test_absolute_table1_floor(tmp_path):
+    fresh = dict(GOOD_EVAL, table1_matches_k4=7)
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL,
+                          ("--min-table1-matches", "8")) == 1
+    assert run_eval_guard(tmp_path, dict(GOOD_EVAL), GOOD_EVAL,
+                          ("--min-table1-matches", "8")) == 0
+
+
+def test_gap_ceiling_inverts(tmp_path):
+    """Gaps guard as ceilings: growing is a regression, shrinking is not."""
+    worse = dict(GOOD_EVAL, gap_mean_respect=0.2)     # 10x the baseline
+    better = dict(GOOD_EVAL, gap_mean_respect=0.001)
+    assert run_eval_guard(tmp_path, worse, GOOD_EVAL) == 1
+    assert run_eval_guard(tmp_path, better, GOOD_EVAL) == 0
+
+
+@pytest.mark.parametrize("flag", ["oracle_parity", "all_schedules_valid"])
+def test_hard_eval_flags(tmp_path, flag):
+    fresh = dict(GOOD_EVAL)
+    fresh[flag] = False
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1
+
+
+@pytest.mark.parametrize("flag", ["gen_all_valid", "gen_respect_beats_list",
+                                  "gen_respect_beats_compiler"])
+def test_generalization_hard_flags(tmp_path, flag):
+    fresh = dict(GOOD_EVAL)
+    fresh[flag] = False
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1
+
+
+def test_gen_only_mode_skips_small_grid_keys(tmp_path):
+    """A --gen-only artifact carries ONLY the generalization keys; the
+    small-grid floors and hard flags must not fire on their absence."""
+    gen_fresh = {"trained_agent": True,
+                 "gen_gap_mean_respect": 0.05, "gen_gap_p95_respect": 0.2,
+                 "gen_all_valid": True, "gen_respect_beats_list": True,
+                 "gen_respect_beats_compiler": True}
+    assert run_eval_guard(tmp_path, gen_fresh, GOOD_EVAL,
+                          ("--gen-only",)) == 0
+    bad = dict(gen_fresh, gen_respect_beats_list=False)
+    assert run_eval_guard(tmp_path, bad, GOOD_EVAL, ("--gen-only",)) == 1
+    # without --gen-only the same artifact fails on the missing tables
+    assert run_eval_guard(tmp_path, gen_fresh, GOOD_EVAL) == 1
+
+
+def test_gen_gap_ceiling_fires(tmp_path):
+    fresh = dict(GOOD_EVAL, gen_gap_mean_respect=0.5)  # 10x baseline
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1
+
+
+def test_below_refined_optimum_fails(tmp_path):
+    fresh = dict(GOOD_EVAL,
+                 aggregate={"respect": {"below_refined_optimum": 1},
+                            "compiler": {"below_refined_optimum": 0},
+                            "list": {"below_refined_optimum": 0}})
+    assert run_eval_guard(tmp_path, fresh, GOOD_EVAL) == 1

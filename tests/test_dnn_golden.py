@@ -5,11 +5,13 @@ Three layers of pinning:
 * **structure** — |V|, max in-degree and depth of every builder output
   must equal the paper's Table I (and the checked-in snapshot), so a
   builder change cannot silently reshape the evaluation graphs;
-* **schedules** — the decoded order and repaired assignment of a FIXED
-  seeded agent on each model are pinned by sha256 digest, along with the
-  evaluated bottleneck/latency.  Any change to the embedding, decode,
-  cost model, rho DP, or repair that shifts a real-model schedule fails
-  here loudly.  Intended shifts are re-pinned with
+* **schedules** — the decoded order and repaired assignment of the
+  TRAINED release agent (``checkpoints/respect-v*``, whose parameter
+  sha256 the golden meta pins) on each model are pinned by sha256
+  digest, along with the evaluated bottleneck/latency.  Any change to
+  the embedding, decode, cost model, rho DP, repair — or to the shipped
+  checkpoint itself — that shifts a real-model schedule fails here
+  loudly.  Intended shifts are re-pinned with
   ``PYTHONPATH=src python scripts/regen_golden.py`` and reviewed as a
   diff of ``tests/golden/dnn_schedules.json``;
 * **gap-to-optimal** — the exact-optimal assignment digest/bottleneck
@@ -50,7 +52,15 @@ def _digest(arr) -> str:
 def golden_results():
     """Schedule all ten models once, with the pinned agent/system."""
     meta = GOLDEN["meta"]
-    sched = RespectScheduler.init(seed=meta["seed"], hidden=meta["hidden"])
+    sched = RespectScheduler.from_release()
+    assert sched.release is not None, (
+        "golden snapshot is pinned against the trained release "
+        "checkpoint (checkpoints/respect-v*), but none loaded — the "
+        "checkpoint is missing or $RESPECT_CHECKPOINT points nowhere")
+    assert sched.release["params_sha256"] == meta["params_sha256"], (
+        "loaded release is not the agent the golden snapshot was pinned "
+        "with — re-pin via scripts/regen_golden.py after a deliberate "
+        "release bump")
     system = PipelineSystem(n_stages=meta["n_stages"])
     graphs = {name: build_model_graph(name) for name in GOLDEN["models"]}
     results = sched.schedule_many(

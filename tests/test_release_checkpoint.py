@@ -1,0 +1,195 @@
+"""Release-checkpoint pipeline tests: the trained agent as a guarded,
+versioned artifact.
+
+Covers the full ship-a-policy path: manifest round-trip through
+``write_release``/``verify_release``, rejection of corrupted / truncated
+/ hand-edited checkpoints (integrity is load-bearing — a bit-flipped
+parameter still produces plausible-looking schedules), release
+discovery + the ``$RESPECT_CHECKPOINT`` override, the seeded-fallback
+warning when no release exists, and the generalization tier's
+best-known-reference invariant (no policy may score below the refined
+reference — by construction, so any hit is a tier bug).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.release import (ReleaseError, find_release,
+                                      load_release_params, params_sha256,
+                                      verify_release, write_release)
+from repro.core import RespectScheduler, validate_monotone
+
+META = {
+    "version": "respect-v1",
+    "config": {"hidden": 16, "mask_infeasible": True, "max_deg": 6},
+    "train": {"data_seed": 0, "steps": 1},
+}
+
+
+@pytest.fixture()
+def release_dir(tmp_path):
+    sched = RespectScheduler.init(seed=0, hidden=16)
+    d = tmp_path / "respect-v1"
+    write_release(sched.params, d, dict(META))
+    return d, sched.params
+
+
+def test_manifest_round_trip(release_dir):
+    d, params = release_dir
+    loaded, manifest = verify_release(d)
+    assert manifest["version"] == "respect-v1"
+    assert manifest["schema_version"] == 1
+    assert manifest["params_sha256"] == params_sha256(params)
+    assert params_sha256(loaded) == params_sha256(params)
+    # the manifest on disk is the one verify returns
+    on_disk = json.loads((d / "release.json").read_text())
+    assert on_disk == manifest
+
+
+def test_params_sha256_order_independent():
+    """The digest must not depend on dict insertion order (it hashes the
+    sorted leaf stream), but must depend on values, names and dtypes."""
+    a = {"x": np.arange(4, dtype=np.float32), "y": np.ones(2)}
+    b = {"y": np.ones(2), "x": np.arange(4, dtype=np.float32)}
+    assert params_sha256(a) == params_sha256(b)
+    c = {"x": np.arange(4, dtype=np.float32), "y": np.ones(2) * 2}
+    assert params_sha256(a) != params_sha256(c)
+    d = {"x": np.arange(4, dtype=np.float64), "y": np.ones(2)}
+    assert params_sha256(a) != params_sha256(d)
+
+
+def test_write_release_requires_schema_keys(tmp_path):
+    sched = RespectScheduler.init(seed=0, hidden=16)
+    with pytest.raises(ReleaseError, match="missing keys"):
+        write_release(sched.params, tmp_path / "r", {"version": "respect-v9"})
+
+
+def test_corrupted_buffer_rejected(release_dir):
+    d, _ = release_dir
+    buf = sorted((d / "params").glob("arr_*.bin"))[0]
+    raw = bytearray(buf.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    buf.write_bytes(bytes(raw))
+    with pytest.raises(ReleaseError, match="digest mismatch"):
+        verify_release(d)
+
+
+def test_truncated_buffer_rejected(release_dir):
+    d, _ = release_dir
+    buf = sorted((d / "params").glob("arr_*.bin"))[-1]
+    buf.write_bytes(buf.read_bytes()[:-8])
+    with pytest.raises(ReleaseError):
+        verify_release(d)
+
+
+def test_hand_edited_manifest_rejected(release_dir):
+    d, _ = release_dir
+    manifest = json.loads((d / "release.json").read_text())
+    manifest["params_sha256"] = "0" * 64
+    (d / "release.json").write_text(json.dumps(manifest))
+    with pytest.raises(ReleaseError, match="digest mismatch"):
+        verify_release(d)
+
+
+def test_missing_manifest_keys_rejected(release_dir):
+    d, _ = release_dir
+    manifest = json.loads((d / "release.json").read_text())
+    del manifest["train"]
+    (d / "release.json").write_text(json.dumps(manifest))
+    with pytest.raises(ReleaseError, match="missing required keys"):
+        verify_release(d)
+
+
+def test_unparseable_manifest_rejected(release_dir):
+    d, _ = release_dir
+    (d / "release.json").write_text("{not json")
+    with pytest.raises(ReleaseError, match="unparseable"):
+        verify_release(d)
+
+
+def test_find_release_picks_newest_version(tmp_path):
+    sched = RespectScheduler.init(seed=0, hidden=16)
+    for v in (1, 3, 2):
+        write_release(sched.params, tmp_path / f"respect-v{v}",
+                      dict(META, version=f"respect-v{v}"))
+    (tmp_path / "respect-vNaN").mkdir()          # non-matching: ignored
+    assert find_release(root=tmp_path).name == "respect-v3"
+    assert find_release(root=tmp_path / "nowhere") is None
+
+
+def test_env_override_pins_release(release_dir, monkeypatch, tmp_path):
+    d, params = release_dir
+    monkeypatch.setenv("RESPECT_CHECKPOINT", str(d))
+    assert find_release(root=tmp_path / "ignored") == d
+    loaded, manifest = load_release_params()
+    assert params_sha256(loaded) == params_sha256(params)
+    # pointing the override at a void forces the fallback path
+    monkeypatch.setenv("RESPECT_CHECKPOINT", str(tmp_path / "void"))
+    assert load_release_params() == (None, None)
+
+
+def test_from_release_loads_and_stamps_manifest(release_dir):
+    d, params = release_dir
+    sched = RespectScheduler.from_release(d)
+    assert sched.release is not None
+    assert sched.release["params_sha256"] == params_sha256(params)
+    assert params_sha256(sched.params) == params_sha256(params)
+
+
+def test_from_release_fallback_warns(monkeypatch, tmp_path):
+    monkeypatch.setenv("RESPECT_CHECKPOINT", str(tmp_path / "nothing"))
+    with pytest.warns(RuntimeWarning, match="falling back to the seeded"):
+        sched = RespectScheduler.from_release(fallback_seed=5, hidden=16)
+    assert sched.release is None
+    # the fallback is the deterministic seeded init, not garbage
+    ref = RespectScheduler.init(seed=5, hidden=16)
+    assert params_sha256(sched.params) == params_sha256(ref.params)
+
+
+def test_from_release_corrupt_raises_not_falls_back(release_dir, monkeypatch):
+    """An EXISTING but corrupt release must raise — silently serving the
+    untrained fallback would mask exactly the drift CI guards against."""
+    d, _ = release_dir
+    buf = sorted((d / "params").glob("arr_*.bin"))[0]
+    raw = bytearray(buf.read_bytes())
+    raw[0] ^= 0xFF
+    buf.write_bytes(bytes(raw))
+    monkeypatch.setenv("RESPECT_CHECKPOINT", str(d))
+    with pytest.raises(ReleaseError):
+        RespectScheduler.from_release()
+
+
+def test_generalization_never_below_refined_reference():
+    """On graphs past the training range, every gap is >= 0 against the
+    refined best-known reference and every schedule stays valid — the
+    tier's construction invariant, exercised end to end with a small
+    |V| = 64 configuration so it fits the fast tier."""
+    from repro.eval.generalization import (GenScenario, check_generalization,
+                                           run_generalization)
+    sched = RespectScheduler.init(seed=0, hidden=16)
+    scenarios = [GenScenario(name="gen/test/k3", family="layered",
+                             n_stages=3, sizes=(64,), graphs_per_size=2,
+                             seed=11)]
+    res = run_generalization(sched, scenarios=scenarios)
+    agg = res["aggregate"]
+    assert res["n_graphs"] == 2
+    for name in ("respect", "compiler", "list"):
+        assert agg[name]["below_refined_reference"] == 0
+        assert agg[name]["gap_mean"] >= -1e-12
+        assert agg[name]["all_valid"]
+    # an untrained agent need not beat the baselines; only the structural
+    # problems may appear in check_generalization output
+    structural = [p for p in check_generalization(res)
+                  if "below_refined" in p or "gen_all_valid" in p]
+    assert structural == []
+
+
+def test_release_scheduler_schedules_validly(release_dir):
+    from repro.core import sample_dag
+    d, _ = release_dir
+    sched = RespectScheduler.from_release(d)
+    g = sample_dag(np.random.default_rng(0), n=20, deg=3)
+    res = sched.schedule(g, 4, use_cache=False)
+    assert validate_monotone(g, res.assignment, 4)
