@@ -53,6 +53,11 @@ def main(argv=None) -> int:
                          "match_exact_service / latency_finite hard flags")
     ap.add_argument("--traffic-baseline", default=None,
                     help="checked-in BENCH_traffic.json baseline")
+    ap.add_argument("--min-slo", type=float, default=None,
+                    help="ABSOLUTE floor on the traffic summary's "
+                         "slo_attainment (fraction of requests meeting "
+                         "their deadline_ms budget) — a ratchet like "
+                         "--min-match-rate: floors only go up")
     ap.add_argument("--eval-fresh", default=None,
                     help="fresh BENCH_eval-schema json; guards the "
                          "gap-to-optimal tables (match_rate_* floors, "
@@ -133,6 +138,13 @@ def main(argv=None) -> int:
                   f"{trf['service_failed']} requests errored "
                   f"({args.traffic_fresh})")
             failed = True
+        if args.min_slo is not None:
+            v = trf.get("slo_attainment")
+            ok = v is not None and v >= args.min_slo
+            print(f"[guard] {'ok' if ok else 'FAIL':4s} "
+                  f"slo_attainment >= {args.min_slo} (absolute floor): "
+                  f"fresh={v}")
+            failed |= not ok
     if args.eval_fresh:
         ef = json.loads(Path(args.eval_fresh).read_text())
         eb = (json.loads(Path(args.eval_baseline).read_text())

@@ -28,7 +28,9 @@ from __future__ import annotations
 
 import hashlib
 import json
+import os
 import re
+import shutil
 import warnings
 from pathlib import Path
 
@@ -80,21 +82,61 @@ def params_sha256(params) -> str:
     return h.hexdigest()
 
 
+def _fsync_path(path: Path) -> None:
+    """fsync one file or directory by descriptor (durability, not just
+    ordering: a staged release must be on disk before it is published)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def write_release(params, directory: str | Path, meta: dict) -> dict:
-    """Write a release checkpoint: params (manager directory format) +
-    ``release.json`` with the digest stamped in.  ``meta`` must carry
-    ``version``, ``config`` and ``train``; returns the full manifest."""
+    """Atomically write a release checkpoint: params (manager directory
+    format) + ``release.json`` with the digest stamped in.  ``meta`` must
+    carry ``version``, ``config`` and ``train``; returns the manifest.
+
+    The whole release is staged in a ``<name>.tmp`` sibling — every file
+    and directory fsynced — then published with ``os.replace`` and a
+    parent-directory fsync.  A crash or truncation mid-write therefore
+    leaves either the previous release intact or no release at all,
+    never a half-written directory that ``find_release`` could discover:
+    the ``.tmp`` name fails the version regex, carries no
+    ``release.json`` until its last staged write, and is swept on the
+    next ``write_release`` to the same path.  (Replacing an *existing*
+    release removes the old directory just before the rename — a crash
+    inside that narrow window leaves no release, which readers treat as
+    "fall back to seeded", never as corrupt.)
+    """
     directory = Path(directory)
-    directory.mkdir(parents=True, exist_ok=True)
+    directory.parent.mkdir(parents=True, exist_ok=True)
     manifest = dict(meta)
     manifest.setdefault("schema_version", 1)
     manifest["params_sha256"] = params_sha256(params)
     missing = [k for k in REQUIRED_MANIFEST_KEYS if k not in manifest]
     if missing:
         raise ReleaseError(f"release meta missing keys: {missing}")
-    save_pytree(params, directory / PARAMS_SUBDIR)
-    (directory / RELEASE_MANIFEST).write_text(
-        json.dumps(manifest, indent=1, sort_keys=True) + "\n")
+    stage = directory.with_name(directory.name + ".tmp")
+    if stage.exists():
+        shutil.rmtree(stage)
+    stage.mkdir(parents=True)
+    try:
+        save_pytree(params, stage / PARAMS_SUBDIR)
+        with open(stage / RELEASE_MANIFEST, "w") as f:
+            f.write(json.dumps(manifest, indent=1, sort_keys=True) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        for p in sorted(stage.rglob("*")):
+            _fsync_path(p)
+        _fsync_path(stage)
+        if directory.exists():
+            shutil.rmtree(directory)
+        os.replace(stage, directory)
+        _fsync_path(directory.parent)
+    except BaseException:
+        shutil.rmtree(stage, ignore_errors=True)
+        raise
     return manifest
 
 

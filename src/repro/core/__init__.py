@@ -20,8 +20,8 @@ from .costmodel import EDGETPU, PipelineSystem, PodSystem, evaluate_schedule  # 
 from .dnn_graphs import MODEL_SPECS, all_model_graphs, build_model_graph  # noqa: F401
 from .embedding import embed_dim, embed_graph  # noqa: F401
 from .exact import brute_force_monotone, exact_bb, exact_dp, order_from_assignment  # noqa: F401
-from .graph import CompGraph, validate_monotone  # noqa: F401
-from .heuristic import compiler_partition, list_schedule  # noqa: F401
+from .graph import CompGraph, InvalidGraphError, validate_graph, validate_monotone  # noqa: F401
+from .heuristic import compiler_partition, heuristic_schedule_many, list_schedule  # noqa: F401
 from .postprocess import repair  # noqa: F401
 from .respect import RespectScheduler  # noqa: F401
 from .rho import rho  # noqa: F401

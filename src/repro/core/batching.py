@@ -160,27 +160,35 @@ class PaddedGraphBatch:
         return jnp.arange(self.bucket_n)[None, :] < self.n_valid[:, None]
 
     def pad_batch(self, bucket_b: int) -> "PaddedGraphBatch":
-        """Pad the batch dimension with inert ``n_valid = 0`` rows."""
+        """Pad the batch dimension with inert ``n_valid = 0`` rows.
+
+        Padding runs on HOST (numpy): an eager ``jnp.concatenate`` here
+        would compile a throwaway XLA kernel per distinct
+        ``(batch, pad)`` shape pair, and arrival-timed micro-batches
+        produce fresh pairs constantly — the fused program's jit
+        boundary transfers the padded arrays in one step regardless.
+        """
         pad = bucket_b - self.batch
         if pad < 0:
             raise ValueError(f"batch {self.batch} exceeds bucket {bucket_b}")
         if pad == 0:
             return self
-        zrow = lambda a: jnp.zeros((pad,) + a.shape[1:], a.dtype)
-        neg = lambda a: jnp.full((pad,) + a.shape[1:], -1, a.dtype)
-        zcat = lambda a: None if a is None else jnp.concatenate([a, zrow(a)])
+
+        def _cat(a, fill):
+            a = np.asarray(a)
+            row = np.full((pad,) + a.shape[1:], fill, a.dtype)
+            return np.concatenate([a, row])
+
+        zcat = lambda a: None if a is None else _cat(a, 0)
         return PaddedGraphBatch(
-            feats=jnp.concatenate([self.feats, zrow(self.feats)]),
-            parent_mat=jnp.concatenate([self.parent_mat,
-                                        neg(self.parent_mat)]),
-            child_mat=jnp.concatenate([self.child_mat, neg(self.child_mat)]),
-            ancestor_mat=jnp.concatenate([self.ancestor_mat,
-                                          zrow(self.ancestor_mat)]),
-            flops=jnp.concatenate([self.flops, zrow(self.flops)]),
-            param_bytes=jnp.concatenate([self.param_bytes,
-                                         zrow(self.param_bytes)]),
-            out_bytes=jnp.concatenate([self.out_bytes, zrow(self.out_bytes)]),
-            n_valid=jnp.concatenate([self.n_valid, zrow(self.n_valid)]),
+            feats=_cat(self.feats, 0),
+            parent_mat=_cat(self.parent_mat, -1),
+            child_mat=_cat(self.child_mat, -1),
+            ancestor_mat=_cat(self.ancestor_mat, False),
+            flops=_cat(self.flops, 0),
+            param_bytes=_cat(self.param_bytes, 0),
+            out_bytes=_cat(self.out_bytes, 0),
+            n_valid=_cat(self.n_valid, 0),
             label_assign=zcat(self.label_assign),
             label_order=zcat(self.label_order),
             exact_assign=zcat(self.exact_assign),

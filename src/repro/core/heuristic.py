@@ -22,7 +22,7 @@ import numpy as np
 from .costmodel import PipelineSystem
 from .graph import CompGraph
 
-__all__ = ["compiler_partition", "list_schedule"]
+__all__ = ["compiler_partition", "list_schedule", "heuristic_schedule_many"]
 
 
 def compiler_partition(
@@ -79,3 +79,26 @@ def list_schedule(
         assign[v] = stage
         acc += float(graph.flops[v])
     return assign
+
+
+def heuristic_schedule_many(
+    graphs: list[CompGraph],
+    n_stages: int,
+    system: PipelineSystem | None = None,
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Last-rung serving entry point: ``(order, assignment)`` per graph via
+    :func:`list_schedule` on the node order itself.
+
+    This is the degradation ladder's floor (see
+    :mod:`repro.serving.degrade`): pure host numpy, no device dispatch, no
+    compile, no shared mutable state — it cannot time out, cannot be hit
+    by the fault-injection seam (which wraps the *scheduler*), and its
+    per-graph loop gives per-request isolation for free.  Output is
+    dependency-monotone by construction (``list_schedule`` never places a
+    node before its parents' stage).
+    """
+    out = []
+    for g in graphs:
+        assign = list_schedule(g, n_stages, system)
+        out.append((np.arange(g.n, dtype=np.int64), assign.astype(np.int64)))
+    return out

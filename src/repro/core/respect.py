@@ -79,6 +79,9 @@ class RespectScheduler:
         self._cache_lock = threading.Lock()
         self.cache_hits = 0
         self.cache_misses = 0
+        # lazily-built seeded weights for the degraded serving rung
+        # (:meth:`fallback_schedule_many`); never mixed with self.params
+        self._fallback_params = None
 
     # ------------------------------------------------------------------ #
     @classmethod
@@ -169,6 +172,51 @@ class RespectScheduler:
         return res
 
     # ------------------------------------------------------------------ #
+    # degraded-path entry points (the serving ladder's middle rung)
+    # ------------------------------------------------------------------ #
+    @property
+    def hidden(self) -> int:
+        """Hidden width of the loaded policy (from the decoder-seed leaf)."""
+        return int(np.asarray(self.params["dec0"]).shape[0])
+
+    def fallback_schedule_many(
+        self,
+        graphs: list[CompGraph],
+        n_stages: int,
+        system: PipelineSystem | None = None,
+        fallback_seed: int = 0,
+    ) -> list[ScheduleResult]:
+        """Schedule with the SEEDED-fallback policy instead of the loaded
+        one: same fused per-bucket programs, same decoder compile cache
+        (parameters are traced arguments, so no recompile at equal
+        hidden width), but freshly initialized weights.
+
+        This is the degradation ladder's middle rung
+        (:mod:`repro.serving.degrade`): when the trained-policy path
+        raises — corrupted release params, a poisoned cache entry, a
+        kernel bug tripped by one input — the service retries here before
+        dropping all the way to the host ``list`` heuristic.  Results
+        NEVER touch the schedule cache (different weights produce
+        different schedules; mixing them would poison policy-path hits)
+        and are stamped ``served_by="fallback"``.
+        """
+        system = (system or PipelineSystem(n_stages)).with_stages(n_stages)
+        if self._fallback_params is None:
+            self._fallback_params = ptrnet.init_params(
+                jax.random.PRNGKey(fallback_seed),
+                embed_dim(self.max_deg), self.hidden)
+        fused = self._decoder.fused_schedules(
+            self._fallback_params, graphs, n_stages, system)
+        out = []
+        for g, (order, assignment) in zip(graphs, fused):
+            res = self._result_from(
+                {"assignment": assignment, "order": order},
+                n_stages, g.model_name, cache_hit=False)
+            res["served_by"] = "fallback"
+            out.append(res)
+        return out
+
+    # ------------------------------------------------------------------ #
     # batch serving API
     # ------------------------------------------------------------------ #
     def _cache_key(self, graph: CompGraph, n_stages: int,
@@ -207,6 +255,7 @@ class RespectScheduler:
             n_stages=n_stages,
             model=model,
             cache_hit=cache_hit,
+            served_by="policy",
         )
 
     def schedule_many(

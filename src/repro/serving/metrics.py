@@ -55,14 +55,32 @@ class LatencyWindow:
 class ServiceStats:
     """One consistent snapshot of the service counters + latency window.
 
-    Invariants (asserted by the concurrency tests):
+    Invariants (asserted by the concurrency and fault-injection tests):
 
-    * ``requests == cache_hits + cache_misses + dedup_hits + failed``
-      once the queue is drained — every submitted request terminates in
-      exactly one bucket (a duplicate whose coalesce target errors or is
-      rejected is reclassified from ``dedup_hits`` to ``failed``);
-    * ``completed + failed == requests`` after a drain;
+    * ``requests == cache_hits + cache_misses + dedup_hits + degraded
+      + failed`` once the queue is drained — every submitted request
+      terminates in exactly one bucket.  ``cache_hits``/``cache_misses``
+      count policy-rung primaries; ``degraded`` counts primaries served
+      on a lower rung (``served_fallback + served_heuristic``); a
+      duplicate whose coalesce target errors or is rejected is
+      reclassified from ``dedup_hits`` to ``failed``;
+    * ``completed + failed == requests`` after a drain — no future is
+      ever left pending, including across worker crashes/restarts;
+    * ``served_policy + degraded + dedup_hits + failed == requests``;
+    * ``degrade_deadline + degrade_overload + degrade_error +
+      degrade_crash == degraded`` (first cause that pushed each primary
+      off the policy rung);
     * ``p50_ms <= p99_ms`` whenever any sample exists.
+
+    ``served_*`` count which ladder rung produced each primary result
+    (:mod:`repro.serving.degrade`); ``deadline_missed`` counts resolved
+    futures (primaries AND waiters) whose ``deadline_ms`` budget had
+    expired by resolution time; ``retries`` counts same-rung retry
+    attempts after transient flush failures; ``worker_restarts`` counts
+    supervisor restarts of the crashed worker loop; ``rejected_invalid``
+    counts submissions refused by graph validation (these raise before
+    ``requests`` is incremented); ``overloaded`` is the live hysteresis
+    latch state.
     """
 
     requests: int
@@ -78,6 +96,19 @@ class ServiceStats:
     max_batch_observed: int
     queue_depth: int
     inflight_keys: int
+    served_policy: int
+    served_fallback: int
+    served_heuristic: int
+    degraded: int
+    degrade_deadline: int
+    degrade_overload: int
+    degrade_error: int
+    degrade_crash: int
+    deadline_missed: int
+    retries: int
+    worker_restarts: int
+    rejected_invalid: int
+    overloaded: bool
     p50_ms: float
     p99_ms: float
     mean_ms: float

@@ -161,6 +161,47 @@ def test_from_release_corrupt_raises_not_falls_back(release_dir, monkeypatch):
         RespectScheduler.from_release()
 
 
+def test_crash_during_staging_keeps_previous_release(release_dir, monkeypatch):
+    """A failure while STAGING a rewrite (disk full, kill, ...) must leave
+    the previous release byte-identical and verifiable, with no staging
+    residue — the atomic-publish contract of ``write_release``."""
+    import repro.checkpoint.release as rel
+    d, _ = release_dir
+    _, before = verify_release(d)
+
+    def boom(*a, **k):
+        raise OSError("simulated crash mid-staging")
+
+    monkeypatch.setattr(rel, "save_pytree", boom)
+    new = RespectScheduler.init(seed=7, hidden=16)
+    with pytest.raises(OSError, match="mid-staging"):
+        write_release(new.params, d, dict(META))
+    _, after = verify_release(d)                 # old release still good
+    assert after == before
+    assert not d.with_name(d.name + ".tmp").exists()
+
+
+def test_truncated_stage_ignored_and_swept(release_dir, tmp_path):
+    """A hard kill mid-write leaves a ``<name>.tmp`` staging dir with a
+    truncated manifest.  It must be invisible to discovery (the previous
+    release stays the active one) and be swept by the next write."""
+    d, _ = release_dir
+    root = d.parent
+    stage = d.with_name(d.name + ".tmp")
+    (stage / "params").mkdir(parents=True)
+    (stage / "params" / "arr_0000.bin").write_bytes(b"\x00" * 7)
+    # truncated mid-write: half a JSON manifest
+    (stage / "release.json").write_text('{"version": "respect-v1", "par')
+    assert find_release(root=root) == d          # stage never discovered
+    _, manifest = verify_release(d)              # live release unharmed
+    new = RespectScheduler.init(seed=7, hidden=16)
+    write_release(new.params, d, dict(META))     # sweeps stage, publishes
+    assert not stage.exists()
+    _, manifest2 = verify_release(d)
+    assert manifest2["params_sha256"] == params_sha256(new.params)
+    assert manifest2["params_sha256"] != manifest["params_sha256"]
+
+
 def test_generalization_never_below_refined_reference():
     """On graphs past the training range, every gap is >= 0 against the
     refined best-known reference and every schedule stays valid — the

@@ -404,7 +404,10 @@ def test_worker_exception_propagates_and_service_survives(sched, pool):
 
     failing = _FailOnce(sched)
     g = pool[4]
-    with SchedulerService(failing, max_batch=1, max_wait_ms=0) as svc:
+    # degrade=None pins the fail-fast contract: flush errors propagate to
+    # the affected futures (the ladder path is covered in test_faults.py)
+    with SchedulerService(failing, max_batch=1, max_wait_ms=0,
+                          degrade=None) as svc:
         f_bad = svc.submit(g, N_STAGES)
         with pytest.raises(ValueError, match="injected solver failure"):
             f_bad.result(timeout=60)
@@ -435,7 +438,7 @@ def test_error_path_reclassifies_waiters_keeps_invariant(sched, pool):
 
     g = pool[0]
     with SchedulerService(_GatedFail(sched), max_batch=1,
-                          max_wait_ms=0) as svc:
+                          max_wait_ms=0, degrade=None) as svc:
         futs = [svc.submit(g, N_STAGES) for _ in range(4)]
         gate.set()
         for f in futs:
