@@ -32,9 +32,11 @@ import json
 import time
 from pathlib import Path
 
+import jax
 import numpy as np
 
 from repro.core import RespectScheduler, repair, rho, sample_batch
+from repro.core.batching import BucketedDecoder
 
 from .common import emit
 
@@ -104,6 +106,30 @@ def run(smoke: bool = False, out_json: str | Path | None = None,
         for a, b in zip(host_assigns, res_batch))
     t_two_phase = t_decode + t_post
 
+    # --- decode impls: per-step scan vs whole-decode kernel ------------- #
+    # The scheduler's own decoder resolves decode_impl automatically
+    # (compiled kernel on TPU, unrolled scan elsewhere); report which one
+    # served the numbers above, and time both impls explicitly so the
+    # regression guard can see a kernel-path collapse.  On CPU the kernel
+    # is measured in interpret mode — orders of magnitude slower than a
+    # real TPU launch, so only its PARITY flag transfers, not its time.
+    decode_impl_used = sched._decoder._resolve_decode_impl(
+        32, HIDDEN)  # |V|=30 graphs land in the 32 bucket
+    kernel_impl = ("kernel" if jax.default_backend() == "tpu"
+                   else "kernel-interpret")
+    dec_scan = BucketedDecoder(decode_impl="scan")
+    dec_kern = BucketedDecoder(decode_impl=kernel_impl)
+    dec_scan.greedy_orders(sched.params, graphs)
+    dec_kern.greedy_orders(sched.params, graphs)
+    t_dec_scan = _best_time(
+        lambda: dec_scan.greedy_orders(sched.params, graphs), repeat)
+    t_dec_kern = _best_time(
+        lambda: dec_kern.greedy_orders(sched.params, graphs), repeat)
+    match_decode_impls = all(
+        np.array_equal(a, b)
+        for a, b in zip(dec_scan.greedy_orders(sched.params, graphs),
+                        dec_kern.greedy_orders(sched.params, graphs)))
+
     # --- repeated-traffic trace ----------------------------------------- #
     t_trace_single = _best_time(
         lambda: [sched.schedule(g, N_STAGES, use_cache=False)
@@ -141,6 +167,10 @@ def run(smoke: bool = False, out_json: str | Path | None = None,
              f"post_fraction={post_frac:.2f};"
              f"fused_speedup_vs_two_phase={t_two_phase / t_cold:.2f}x;"
              f"match_fused_vs_host={match_fused_vs_host}"),
+        emit("batched/split/decode_scan", t_dec_scan / batch * 1e6,
+             f"graphs_per_sec={batch / t_dec_scan:.1f}"),
+        emit("batched/split/decode_kernel", t_dec_kern / batch * 1e6,
+             f"impl={kernel_impl};match_scan={match_decode_impls}"),
         emit("batched/traffic/single_loop", t_trace_single / batch * 1e6,
              f"graphs_per_sec={gps_traffic_single:.1f};pool={pool_size}"),
         emit("batched/traffic/schedule_many", t_trace_batched / batch * 1e6,
@@ -169,6 +199,11 @@ def run(smoke: bool = False, out_json: str | Path | None = None,
         "graphs_per_sec_two_phase": batch / t_two_phase,
         "speedup_fused_vs_two_phase": t_two_phase / t_cold,
         "match_fused_vs_host_pipeline": bool(match_fused_vs_host),
+        "t_decode_scan_s": t_dec_scan,
+        "t_decode_kernel_s": t_dec_kern,
+        "decode_impl_used": decode_impl_used,
+        "decode_kernel_impl_timed": kernel_impl,
+        "match_decode_impls": bool(match_decode_impls),
     }
     if out_json is not None:
         smoke_summary = {k: summary[k] for k in SMOKE_KEYS}

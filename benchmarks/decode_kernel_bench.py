@@ -1,0 +1,123 @@
+"""Decode-impl microbenchmark: whole-decode kernel vs per-step scan.
+
+Sweeps the persistent whole-decode kernel (:mod:`repro.kernels.ptr.decode`)
+against the ``lax.scan`` decode across serving-relevant shapes — buckets
+8..64 x batches 16..128 — through the SAME batched entry point production
+uses (``BucketedDecoder.greedy_orders``), so the numbers include packing
+and dispatch, not just the XLA program.
+
+On CPU the kernel runs in **interpret mode**: a pure-Python Pallas
+evaluator that is orders of magnitude slower than a compiled TPU launch.
+Its wall-times here are NOT a TPU prediction — only the parity column
+transfers.  On a real TPU (``jax.default_backend() == "tpu"``) the same
+sweep times the compiled kernel.
+
+    PYTHONPATH=src python -m benchmarks.decode_kernel_bench [--smoke]
+        [--check] [--out-json BENCH_decode.json]
+
+``--check`` exits non-zero if any swept shape loses order parity, which
+is how the CI matrix row turns this bench into a guard.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import sample_dag
+from repro.core.batching import BucketedDecoder
+from repro.core.ptrnet import init_params
+from repro.core.embedding import embed_dim
+
+from .common import emit
+
+MAX_DEG = 6
+HIDDEN = 128
+
+
+def _best_time(fn, repeat: int) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, out_json: str | Path | None = None) -> dict:
+    # bucket sizes are driven by graph |V|: n == bucket keeps each sweep
+    # point in exactly the intended compiled shape
+    buckets = [8, 32] if smoke else [8, 16, 32, 64]
+    batches = [16] if smoke else [16, 64, 128]
+    repeat = 2 if smoke else 3
+    params = init_params(jax.random.PRNGKey(0), embed_dim(MAX_DEG), HIDDEN)
+    kernel_impl = ("kernel" if jax.default_backend() == "tpu"
+                   else "kernel-interpret")
+    dec_scan = BucketedDecoder(decode_impl="scan")
+    dec_kern = BucketedDecoder(decode_impl=kernel_impl)
+
+    rows = []
+    all_match = True
+    for n in buckets:
+        for batch in batches:
+            rng = np.random.default_rng(n * 1000 + batch)
+            graphs = [sample_dag(rng, n=n, deg=3) for _ in range(batch)]
+            o_scan = dec_scan.greedy_orders(params, graphs)  # warm compile
+            o_kern = dec_kern.greedy_orders(params, graphs)
+            match = all(np.array_equal(a, b)
+                        for a, b in zip(o_scan, o_kern))
+            all_match &= match
+            t_scan = _best_time(
+                lambda: dec_scan.greedy_orders(params, graphs), repeat)
+            t_kern = _best_time(
+                lambda: dec_kern.greedy_orders(params, graphs), repeat)
+            emit(f"decode/n{n}/b{batch}/scan", t_scan / batch * 1e6,
+                 f"graphs_per_sec={batch / t_scan:.1f}")
+            emit(f"decode/n{n}/b{batch}/{kernel_impl}",
+                 t_kern / batch * 1e6,
+                 f"speedup_vs_scan={t_scan / t_kern:.2f}x;match={match}")
+            rows.append({
+                "bucket_n": n, "batch": batch,
+                "t_scan_s": t_scan, "t_kernel_s": t_kern,
+                "speedup_kernel_vs_scan": t_scan / t_kern,
+                "match": bool(match),
+            })
+
+    summary = {
+        "hidden": HIDDEN,
+        "kernel_impl": kernel_impl,
+        "backend": jax.default_backend(),
+        "all_match": bool(all_match),
+        "rows": rows,
+    }
+    if out_json is not None:
+        Path(out_json).write_text(json.dumps(summary, indent=2))
+        print(f"# wrote {out_json}")
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep (buckets 8/32, batch 16) for CI")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any swept shape loses order parity")
+    ap.add_argument("--out-json", default=None,
+                    help="write the sweep summary (e.g. BENCH_decode.json)")
+    args = ap.parse_args(argv)
+    summary = run(smoke=args.smoke, out_json=args.out_json)
+    if args.check and not summary["all_match"]:
+        bad = [r for r in summary["rows"] if not r["match"]]
+        print(f"# PARITY FAIL: {len(bad)} shape(s) diverged: "
+              + ", ".join(f"n{r['bucket_n']}/b{r['batch']}" for r in bad))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,7 +14,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 BENCHES = ["table1", "fig3", "fig4", "fig5", "partitioner", "kernels",
-           "roofline", "batched", "train", "traffic", "eval"]
+           "decode", "roofline", "batched", "train", "traffic", "eval"]
 
 
 def main() -> int:
@@ -35,17 +35,18 @@ def main() -> int:
                          "vs fused; --smoke default: BENCH_serve.json)")
     args = ap.parse_args()
 
-    from . import (batched_schedule_bench, eval_grid, fig3_solving_time,
-                   fig4_inference_runtime, fig5_gap_to_optimal, kernels_bench,
-                   partitioner_bench, roofline_table, serve_traffic_bench,
-                   table1_graphs, train_bench)
+    from . import (batched_schedule_bench, decode_kernel_bench, eval_grid,
+                   fig3_solving_time, fig4_inference_runtime,
+                   fig5_gap_to_optimal, kernels_bench, partitioner_bench,
+                   roofline_table, serve_traffic_bench, table1_graphs,
+                   train_bench)
     mods = {
         "table1": table1_graphs, "fig3": fig3_solving_time,
         "fig4": fig4_inference_runtime, "fig5": fig5_gap_to_optimal,
         "partitioner": partitioner_bench, "kernels": kernels_bench,
-        "roofline": roofline_table, "batched": batched_schedule_bench,
-        "train": train_bench, "traffic": serve_traffic_bench,
-        "eval": eval_grid,
+        "decode": decode_kernel_bench, "roofline": roofline_table,
+        "batched": batched_schedule_bench, "train": train_bench,
+        "traffic": serve_traffic_bench, "eval": eval_grid,
     }
     if args.smoke and args.only:
         ap.error("--smoke runs the fixed CI subset; drop --only or --smoke")

@@ -37,8 +37,14 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-fresh", default=None,
                     help="fresh BENCH_serve-schema json; guards the "
                          "host-reference exactness flag "
-                         "(match_fused_vs_host_pipeline), which the smoke "
-                         "schema does not carry")
+                         "(match_fused_vs_host_pipeline) and the decode-"
+                         "impl parity flag (match_decode_impls), which "
+                         "the smoke schema does not carry")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="checked-in BENCH_serve.json baseline; adds a "
+                         "ratio floor on graphs_per_sec_batched_cold (the "
+                         "cold-miss throughput the decode-kernel work is "
+                         "pinned against)")
     ap.add_argument("--train-fresh", default=None,
                     help="fresh BENCH_train-schema json; guards training "
                          "throughput (steps_per_s_fixed, "
@@ -83,9 +89,11 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     metrics = args.metric or ["speedup_traffic"]
     if (args.fresh is None and args.train_fresh is None
-            and args.traffic_fresh is None and args.eval_fresh is None):
+            and args.traffic_fresh is None and args.eval_fresh is None
+            and args.serve_fresh is None):
         ap.error("nothing to guard: pass FRESH BASELINE and/or "
-                 "--train-fresh and/or --traffic-fresh and/or --eval-fresh")
+                 "--serve-fresh and/or --train-fresh and/or "
+                 "--traffic-fresh and/or --eval-fresh")
     if args.fresh is not None and args.baseline is None:
         ap.error("FRESH given without BASELINE")
 
@@ -111,6 +119,11 @@ def main(argv=None) -> int:
         base = json.loads(Path(args.baseline).read_text())
         for m in metrics:
             guard_ratio(fresh, base, m)
+
+    if args.serve_fresh and args.serve_baseline:
+        sf = json.loads(Path(args.serve_fresh).read_text())
+        sb = json.loads(Path(args.serve_baseline).read_text())
+        guard_ratio(sf, sb, "graphs_per_sec_batched_cold")
 
     if args.train_fresh:
         tf = json.loads(Path(args.train_fresh).read_text())
@@ -255,7 +268,8 @@ def main(argv=None) -> int:
     if args.fresh is not None:
         checks[args.fresh] = ("match_exact_distinct", "match_exact_traffic")
     if args.serve_fresh:
-        checks[args.serve_fresh] = ("match_fused_vs_host_pipeline",)
+        checks[args.serve_fresh] = ("match_fused_vs_host_pipeline",
+                                    "match_decode_impls")
     if args.traffic_fresh:
         checks[args.traffic_fresh] = ("match_exact_service",)
     for path, flags in checks.items():

@@ -33,7 +33,9 @@ sizes re-uses the same compiled programs.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
+import warnings
 from collections import OrderedDict
 
 import jax
@@ -51,10 +53,29 @@ __all__ = [
     "PaddedGraphBatch",
     "pack_padded",
     "BucketedDecoder",
+    "DECODE_IMPLS",
+    "DECODE_IMPL_ENV",
+    "DECODE_UNROLL",
 ]
 
 MIN_BUCKET = 8
 MIN_CHILD_WIDTH = 4
+
+#: scan-path unroll factor for the serving decode programs: identical
+#: per-step math (orders are bit-identical), but unrolling cuts the CPU
+#: loop-dispatch overhead that dominates hidden<=256 decode steps (the
+#: measured cold-miss win on this class of host is ~1.6x).
+DECODE_UNROLL = 8
+
+#: decode_impl choices: how a serving program runs the pointing loop.
+#: None auto-picks per shape ("kernel" on TPU when the whole-decode
+#: kernel supports the bucket, else "scan").
+DECODE_IMPLS = (None, "scan", "kernel", "kernel-interpret")
+
+#: env override (lowest precedence below an explicit constructor arg):
+#: RESPECT_DECODE_IMPL=scan|kernel|kernel-interpret forces one impl for
+#: every BucketedDecoder in the process.
+DECODE_IMPL_ENV = "RESPECT_DECODE_IMPL"
 
 
 def bucket_for(n: int, min_bucket: int = MIN_BUCKET) -> int:
@@ -329,16 +350,40 @@ class BucketedDecoder:
     pointer/glimpse op for decode steps: None auto-picks the Pallas kernel
     on TPU and the hoisted pure-jnp path elsewhere; "ref"/"interpret"/
     "pallas" force a :mod:`repro.kernels.ptr` implementation.
+
+    ``decode_impl`` selects how the WHOLE pointing loop runs (see
+    :data:`DECODE_IMPLS`): "scan" keeps the per-step ``lax.scan``
+    (unrolled by :data:`DECODE_UNROLL`), "kernel" runs the persistent
+    whole-decode Pallas kernel (:mod:`repro.kernels.ptr.decode` — TPU),
+    "kernel-interpret" the same kernel through the Pallas interpreter
+    (CPU-testable), and None auto-picks per bucket: the kernel on TPU
+    when :func:`repro.kernels.ptr.ops.decode_kernel_supported` accepts
+    the (bucket, hidden) shape, the scan everywhere else.  A forced
+    "kernel" on an unsupported shape falls back to the scan with a
+    single warning instead of failing.  The ``RESPECT_DECODE_IMPL`` env
+    var overrides the default when no explicit argument is given.
+    ``decode_bf16`` stores the kernel's context/projection blocks in
+    bfloat16 (f32 accumulation; kernel paths only, default off).
     """
 
     def __init__(self, mask_infeasible: bool = True, max_deg: int = 6,
                  min_bucket: int = MIN_BUCKET, max_compiled: int = 16,
-                 logits_impl: str | None = None):
+                 logits_impl: str | None = None,
+                 decode_impl: str | None = None,
+                 decode_bf16: bool = False):
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
         self.min_bucket = min_bucket
         self.logits_impl = logits_impl
+        if decode_impl is None:
+            decode_impl = os.environ.get(DECODE_IMPL_ENV) or None
+        if decode_impl not in DECODE_IMPLS:
+            raise ValueError(
+                f"decode_impl {decode_impl!r} not one of {DECODE_IMPLS}")
+        self.decode_impl = decode_impl
+        self.decode_bf16 = decode_bf16
         self._fns = _LRU(max_compiled)
+        self._warned_fallback = False
 
     # ------------------------------------------------------------------ #
     def _logits_builder(self):
@@ -350,46 +395,113 @@ class BucketedDecoder:
         from ..kernels.ptr import ops as ptr_ops
         return lambda params, C: ptr_ops.make_logits_fn(params, C, impl=impl)
 
-    def _decode_fn(self, bucket_n: int, bucket_b: int):
-        key = ("decode", bucket_n, bucket_b)
+    def _resolve_decode_impl(self, bucket_n: int, hidden: int) -> str:
+        """Pick the decode impl for one compiled shape (see class doc)."""
+        from ..kernels.ptr import ops as ptr_ops
+        impl = self.decode_impl
+        if impl is None:
+            if (jax.default_backend() == "tpu"
+                    and ptr_ops.decode_kernel_supported(bucket_n, hidden)):
+                return "kernel"
+            return "scan"
+        if impl == "kernel":
+            reason = None
+            if jax.default_backend() != "tpu":
+                reason = (f"compiled Pallas is TPU-only (backend="
+                          f"{jax.default_backend()}); use "
+                          "'kernel-interpret' to exercise the kernel here")
+            elif not ptr_ops.decode_kernel_supported(bucket_n, hidden):
+                reason = (f"bucket_n={bucket_n}, hidden={hidden} does not "
+                          "tile/fit VMEM")
+            if reason is not None:
+                if not self._warned_fallback:
+                    self._warned_fallback = True
+                    warnings.warn(
+                        f"decode_impl='kernel' unavailable: {reason}; "
+                        "falling back to the scan path",
+                        RuntimeWarning, stacklevel=3)
+                return "scan"
+        return impl
+
+    @staticmethod
+    def _hidden_of(params) -> int:
+        return int(params["dec0"].shape[-1])
+
+    def _decode_fn(self, bucket_n: int, bucket_b: int, impl: str):
+        key = ("decode", bucket_n, bucket_b, impl)
         fn = self._fns.get(key)
         if fn is None:
             mask_infeasible = self.mask_infeasible
-            builder = self._logits_builder()
+            if impl in ("kernel", "kernel-interpret"):
+                from ..kernels.ptr import decode as ptr_decode
+                interpret = impl == "kernel-interpret"
+                bf16 = self.decode_bf16
 
-            def batched(params, feats, pmat, n_valid):
-                def one(f, p, nv):
-                    order, _, _ = ptrnet.greedy_order(
-                        params, f, p, mask_infeasible, nv, builder)
+                def batched(params, feats, pmat, n_valid):
+                    order, _, _ = ptr_decode.decode_pack(
+                        params, feats, pmat, n_valid,
+                        mask_infeasible=mask_infeasible,
+                        interpret=interpret, bf16=bf16)
                     return order
+            else:
+                builder = self._logits_builder()
 
-                return jax.vmap(one)(feats, pmat, n_valid)
+                def batched(params, feats, pmat, n_valid):
+                    def one(f, p, nv):
+                        order, _, _ = ptrnet.greedy_order(
+                            params, f, p, mask_infeasible, nv, builder,
+                            unroll=DECODE_UNROLL)
+                        return order
+
+                    return jax.vmap(one)(feats, pmat, n_valid)
 
             fn = jax.jit(batched)
             self._fns.put(key, fn)
         return fn
 
     def _fused_fn(self, bucket_n: int, bucket_b: int, child_width: int,
-                  n_stages: int, system: PipelineSystem):
-        key = ("fused", bucket_n, bucket_b, child_width, n_stages, system)
+                  n_stages: int, system: PipelineSystem, impl: str):
+        key = ("fused", bucket_n, bucket_b, child_width, n_stages, system,
+               impl)
         fn = self._fns.get(key)
         if fn is None:
             mask_infeasible = self.mask_infeasible
-            builder = self._logits_builder()
 
-            def batched(params, batch: PaddedGraphBatch):
-                def one(f, p, c, a, fl, pb, ob, nv):
-                    order, _, _ = ptrnet.greedy_order(
-                        params, f, p, mask_infeasible, nv, builder)
-                    assign, _ = segment.rho_dp_jax(
-                        order, fl, pb, ob, p, n_stages, system, n_valid=nv)
-                    assign = segment.repair_jax(p, c, a, assign, n_stages)
-                    return order, assign
+            def post_one(order, p, c, a, fl, pb, ob, nv):
+                assign, _ = segment.rho_dp_jax(
+                    order, fl, pb, ob, p, n_stages, system, n_valid=nv)
+                return segment.repair_jax(p, c, a, assign, n_stages)
 
-                return jax.vmap(one)(
-                    batch.feats, batch.parent_mat, batch.child_mat,
-                    batch.ancestor_mat, batch.flops, batch.param_bytes,
-                    batch.out_bytes, batch.n_valid)
+            if impl in ("kernel", "kernel-interpret"):
+                from ..kernels.ptr import decode as ptr_decode
+                interpret = impl == "kernel-interpret"
+                bf16 = self.decode_bf16
+
+                def batched(params, batch: PaddedGraphBatch):
+                    orders, _, _ = ptr_decode.decode_pack(
+                        params, batch.feats, batch.parent_mat,
+                        batch.n_valid, mask_infeasible=mask_infeasible,
+                        interpret=interpret, bf16=bf16)
+                    assigns = jax.vmap(post_one)(
+                        orders, batch.parent_mat, batch.child_mat,
+                        batch.ancestor_mat, batch.flops,
+                        batch.param_bytes, batch.out_bytes, batch.n_valid)
+                    return orders, assigns
+            else:
+                builder = self._logits_builder()
+
+                def batched(params, batch: PaddedGraphBatch):
+                    def one(f, p, c, a, fl, pb, ob, nv):
+                        order, _, _ = ptrnet.greedy_order(
+                            params, f, p, mask_infeasible, nv, builder,
+                            unroll=DECODE_UNROLL)
+                        return order, post_one(order, p, c, a, fl, pb, ob,
+                                               nv)
+
+                    return jax.vmap(one)(
+                        batch.feats, batch.parent_mat, batch.child_mat,
+                        batch.ancestor_mat, batch.flops, batch.param_bytes,
+                        batch.out_bytes, batch.n_valid)
 
             fn = jax.jit(batched)
             self._fns.put(key, fn)
@@ -418,8 +530,10 @@ class BucketedDecoder:
         :meth:`fused_schedules`.
         """
         orders: list[np.ndarray | None] = [None] * len(graphs)
+        hidden = self._hidden_of(params)
         for _, idxs, batch in self._packed_buckets(graphs, decode_only=True):
-            out = self._decode_fn(batch.bucket_n, batch.batch)(
+            impl = self._resolve_decode_impl(batch.bucket_n, hidden)
+            out = self._decode_fn(batch.bucket_n, batch.batch, impl)(
                 params, batch.feats, batch.parent_mat, batch.n_valid)
             out = np.asarray(out)
             for row, i in enumerate(idxs):
@@ -443,9 +557,11 @@ class BucketedDecoder:
         """
         system = system.with_stages(n_stages)
         results: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(graphs)
+        hidden = self._hidden_of(params)
         for _, idxs, batch in self._packed_buckets(graphs):
+            impl = self._resolve_decode_impl(batch.bucket_n, hidden)
             fn = self._fused_fn(batch.bucket_n, batch.batch,
-                                batch.child_width, n_stages, system)
+                                batch.child_width, n_stages, system, impl)
             orders, assigns = fn(params, batch)
             orders = np.asarray(orders)
             assigns = np.asarray(assigns)

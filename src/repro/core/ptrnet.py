@@ -91,12 +91,16 @@ def _lstm_step(p, x, state):
     return h, c
 
 
-def encode(params, feats, n_valid=None):
+def encode(params, feats, n_valid=None, unroll: int = 1):
     """feats (n, F) -> contexts C (n, H), final (h, c), projected emb (n, H).
 
     With ``n_valid`` the LSTM state stops updating after the first
     ``n_valid`` rows, so the final state (the decoder seed) equals the one
     an unpadded encode of ``feats[:n_valid]`` would produce.
+
+    ``unroll`` is forwarded to ``lax.scan`` — the per-step math is
+    unchanged (identical results), but unrolling slashes the loop
+    dispatch overhead that dominates small-``H`` steps on CPU hosts.
     """
     emb = feats @ params["w_in"] + params["b_in"]
     hidden = params["enc"]["wh"].shape[0]
@@ -108,7 +112,7 @@ def encode(params, feats, n_valid=None):
             state = _lstm_step(params["enc"], x, state)
             return state, state[0]
 
-        final, contexts = jax.lax.scan(step, init, emb)
+        final, contexts = jax.lax.scan(step, init, emb, unroll=unroll)
     else:
         idx = jnp.arange(emb.shape[0])
 
@@ -120,7 +124,8 @@ def encode(params, feats, n_valid=None):
                 lambda a, b: jnp.where(live, a, b), new, state)
             return new, new[0]
 
-        final, contexts = jax.lax.scan(step, init, (emb, idx))
+        final, contexts = jax.lax.scan(step, init, (emb, idx),
+                                       unroll=unroll)
     return contexts, final, emb
 
 
@@ -165,6 +170,7 @@ def decode(
     mask_infeasible: bool = True,
     logits_fn=None,
     n_valid=None,
+    unroll: int = 1,
 ):
     """Run the full pointing decode (Alg. 1).
 
@@ -179,6 +185,8 @@ def decode(
         steps only point at real nodes, the remaining steps consume the
         padded slots with zero log-prob/entropy, so ``order[:n_valid]`` is
         a permutation of the real nodes.
+      unroll: ``lax.scan`` unroll factor (identical math, fewer loop
+        dispatches — the serving engine's CPU fast path).
 
     Returns: order (n,) int32, logp (n,) per-step log-probs, entropy (n,).
     """
@@ -242,32 +250,48 @@ def decode(
         return (state, emb[idx], visited), (idx, lp, ent)
 
     init = (enc_state, params["dec0"], jnp.zeros(n, bool))
-    _, (order, logp, ent) = jax.lax.scan(step, init, keys)
+    _, (order, logp, ent) = jax.lax.scan(step, init, keys, unroll=unroll)
     return order.astype(jnp.int32), logp, ent
 
 
 def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid,
-         logits_builder=None):
-    C, enc_state, emb = encode(params, feats, n_valid=n_valid)
+         logits_builder=None, decode_builder=None, unroll: int = 1):
+    C, enc_state, emb = encode(params, feats, n_valid=n_valid,
+                               unroll=unroll)
+    if decode_builder is not None:
+        # whole-decode hook: the builder's decode_fn replaces the entire
+        # per-step scan (e.g. the persistent Pallas kernel,
+        # repro.kernels.ptr.decode.make_decode_fn) — it owns masking,
+        # argmax/sampling and the drain semantics end to end.
+        decode_fn = decode_builder(params)
+        return decode_fn(
+            params, C, emb, enc_state, parent_mat,
+            sample_key=sample_key, mask_infeasible=mask_infeasible,
+            n_valid=n_valid)
     logits_fn = None if logits_builder is None else logits_builder(params, C)
     return decode(
         params, C, emb, enc_state, parent_mat,
         sample_key=sample_key, mask_infeasible=mask_infeasible,
-        logits_fn=logits_fn, n_valid=n_valid,
+        logits_fn=logits_fn, n_valid=n_valid, unroll=unroll,
     )
 
 
 def greedy_order(params, feats, parent_mat, mask_infeasible=True,
-                 n_valid=None, logits_builder=None):
+                 n_valid=None, logits_builder=None, decode_builder=None,
+                 unroll: int = 1):
     """``logits_builder(params, C) -> logits_fn`` overrides the pointer/
     glimpse op after encoding (e.g. the Pallas kernel via
     :func:`repro.kernels.ptr.ops.make_logits_fn`); None keeps the hoisted
-    pure-jnp path."""
+    pure-jnp path.  ``decode_builder(params) -> decode_fn`` replaces the
+    WHOLE decode loop instead (the persistent kernel,
+    :func:`repro.kernels.ptr.decode.make_decode_fn`); it wins over
+    ``logits_builder`` when both are given."""
     return _run(params, feats, parent_mat, None, mask_infeasible, n_valid,
-                logits_builder)
+                logits_builder, decode_builder, unroll)
 
 
 def sample_order(params, feats, parent_mat, key, mask_infeasible=True,
-                 n_valid=None, logits_builder=None):
+                 n_valid=None, logits_builder=None, decode_builder=None,
+                 unroll: int = 1):
     return _run(params, feats, parent_mat, key, mask_infeasible, n_valid,
-                logits_builder)
+                logits_builder, decode_builder, unroll)

@@ -60,16 +60,21 @@ class ScheduleResult(dict):
 class RespectScheduler:
     def __init__(self, params, mask_infeasible: bool = True, max_deg: int = 6,
                  cache_size: int = 1024, logits_impl: str | None = None,
-                 max_compiled: int = 16):
+                 max_compiled: int = 16, decode_impl: str | None = None,
+                 decode_bf16: bool = False):
         self.params = params
         #: release manifest dict when the params came from a verified
         #: trained release checkpoint (see :meth:`from_release`), else None
         self.release: dict | None = None
         self.mask_infeasible = mask_infeasible
         self.max_deg = max_deg
+        # decode_impl/decode_bf16 select how the pointing loop runs (the
+        # scan, or the persistent whole-decode Pallas kernel — see
+        # BucketedDecoder); None auto-picks per backend and bucket shape.
         self._decoder = BucketedDecoder(
             mask_infeasible=mask_infeasible, max_deg=max_deg,
-            logits_impl=logits_impl, max_compiled=max_compiled)
+            logits_impl=logits_impl, max_compiled=max_compiled,
+            decode_impl=decode_impl, decode_bf16=decode_bf16)
         self._cache: OrderedDict = OrderedDict()   # content hash -> result
         self._cache_size = cache_size
         # One lock guards the schedule cache AND the stat counters, so the

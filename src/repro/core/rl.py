@@ -269,11 +269,52 @@ def _policy_rewards(params, batch: PaddedGraphBatch, keys, n_stages, system,
 
 
 def make_rollout_fn(n_stages: int, system: PipelineSystem,
-                    mask_infeasible: bool = True, sample: bool = False):
+                    mask_infeasible: bool = True, sample: bool = False,
+                    decode_impl: str | None = None):
     """Jitted per-graph rollout: (params, batch, key) -> (rewards, logp,
     entropy, orders, assigns), each leading-dim B.  The building block the
-    train/eval steps share; exposed for parity tests and benchmarks."""
+    train/eval steps share; exposed for parity tests and benchmarks.
+
+    ``decode_impl`` ("kernel" | "kernel-interpret") runs the decode
+    through the persistent whole-decode Pallas kernel
+    (:mod:`repro.kernels.ptr.decode`) instead of the per-graph scan: the
+    sampled variant consumes the same per-step ``fold_in`` uniform
+    stream, so rollout trajectories match the scan path.  Rollouts are
+    forward-only — the REINFORCE loss (`_sum_loss_fn`) differentiates
+    through the sampled log-probs and therefore always keeps the scan.
+    """
     system = system.with_stages(n_stages)
+
+    if decode_impl in ("kernel", "kernel-interpret"):
+        from ..kernels.ptr import decode as ptr_decode
+        interpret = decode_impl == "kernel-interpret"
+
+        @jax.jit
+        def rollout(params, batch: PaddedGraphBatch, key):
+            keys = jax.random.split(key, batch.batch)
+            order, logp, ent = ptr_decode.decode_pack(
+                params, batch.feats, batch.parent_mat, batch.n_valid,
+                sample_keys=keys if sample else None, sampled=sample,
+                mask_infeasible=mask_infeasible, interpret=interpret)
+
+            def post(o, lp, en, fl, pb, ob, pmat, label, nv):
+                assign, _ = rho_dp_jax(o, fl, pb, ob, pmat, n_stages,
+                                       system, n_valid=nv)
+                valid = jnp.arange(assign.shape[0]) < nv
+                assign = jnp.where(valid, assign, 0)
+                r = cosine_reward(assign, label)
+                ent_mean = en.sum() / jnp.maximum(
+                    nv.astype(jnp.float32), 1.0)
+                return r, lp.sum(), ent_mean, o, assign
+
+            return jax.vmap(post)(
+                order, logp, ent, batch.flops, batch.param_bytes,
+                batch.out_bytes, batch.parent_mat, batch.label_assign,
+                batch.n_valid)
+
+        return rollout
+    if decode_impl not in (None, "scan"):
+        raise ValueError(f"unknown decode_impl {decode_impl!r}")
 
     @jax.jit
     def rollout(params, batch: PaddedGraphBatch, key):

@@ -1,2 +1,9 @@
-from .ops import pointer_step, precompute_refs  # noqa: F401
+from .ops import (  # noqa: F401
+    decode_kernel_supported,
+    make_decode_fn,
+    make_logits_fn,
+    pointer_shapes_ok,
+    pointer_step,
+    precompute_refs,
+)
 from .ref import reference_pointer_step  # noqa: F401

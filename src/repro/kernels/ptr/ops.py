@@ -1,13 +1,77 @@
-"""Public wrapper for the fused pointer/glimpse step."""
+"""Public wrapper for the fused pointer/glimpse ops (single-step kernel,
+whole-decode kernel) plus the TPU shape-validation shared by both.
+
+The block specs of both kernels keep each graph's context/projection
+blocks fully VMEM-resident — which is only legal when the block shapes
+land on the TPU vector-register tiling (f32 tiles are 8 sublanes x 128
+lanes) and the per-step working set fits VMEM.  :func:`pointer_shapes_ok`
+/ :func:`decode_kernel_supported` check exactly that; auto-selection
+falls back to the pure-jnp / scan path with a SINGLE warning instead of
+failing mid-compile when a bucket/hidden combo doesn't fit (the old code
+hardcoded the assumption that ``hidden`` is a lane multiple and silently
+broke elsewhere).
+"""
 
 from __future__ import annotations
+
+import warnings
 
 import jax
 
 from .kernel import pointer_step_pallas
 from .ref import reference_pointer_step
 
-__all__ = ["precompute_refs", "pointer_step", "make_logits_fn"]
+__all__ = [
+    "precompute_refs",
+    "pointer_step",
+    "make_logits_fn",
+    "pointer_shapes_ok",
+    "decode_kernel_supported",
+    "make_decode_fn",
+]
+
+# f32 VREG tiling on TPU: 8 sublanes x 128 lanes
+_SUBLANE = 8
+_LANE = 128
+# leave headroom below the ~16 MB/core VMEM budget for double buffering
+_VMEM_LIMIT_BYTES = 12 << 20
+
+_warned: set[str] = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def pointer_shapes_ok(n: int, hidden: int) -> bool:
+    """True when the SINGLE-STEP kernel's full-block specs are tileable:
+    the node dim must land on the sublane grid and ``hidden`` on the lane
+    grid (the specs load whole (n, hidden) blocks)."""
+    return n % _SUBLANE == 0 and hidden % _LANE == 0
+
+
+def decode_kernel_supported(
+        bucket_n: int, hidden: int, *,
+        vmem_limit_bytes: int = _VMEM_LIMIT_BYTES) -> bool:
+    """True when the WHOLE-DECODE kernel can hold one graph's working set
+    in VMEM at this (bucket, hidden): tiling-aligned blocks plus an f32
+    footprint estimate — 4 big (n, H) operands (C, the two hoisted
+    projections, emb), the (n, n) parent-adjacency, and the decoder/head
+    weights — under the per-core budget."""
+    if bucket_n % _SUBLANE != 0 or hidden % _LANE != 0:
+        return False
+    f32 = 4
+    per_graph = (4 * bucket_n * hidden    # C, CWg, CWp, emb
+                 + bucket_n * bucket_n    # parent adjacency
+                 + 2 * bucket_n           # valid + uniforms columns
+                 + 2 * hidden) * f32      # h0, c0
+    weights = (2 * hidden * 4 * hidden    # dec wx, wh
+               + 4 * hidden               # dec bias
+               + 2 * hidden * hidden      # glimpse/pointer w_q
+               + 3 * hidden) * f32        # v_g, v_p, dec0
+    return per_graph + weights <= vmem_limit_bytes
 
 
 def precompute_refs(params, C):
@@ -22,9 +86,24 @@ def precompute_refs(params, C):
 def pointer_step(params, C, CWg, CWp, h, mask, *, impl: str | None = None):
     """One decode step; shapes as in the kernel (batched) or unbatched.
 
-    impl: "pallas" | "interpret" | "ref" (auto: pallas on TPU else ref).
+    impl: "pallas" | "interpret" | "ref" (auto: pallas on TPU else ref;
+    auto also requires :func:`pointer_shapes_ok`, warning once and using
+    the reference op when the shape can't tile).
     """
-    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "ref")
+    n, hidden = C.shape[-2], C.shape[-1]
+    if impl is None:
+        if jax.default_backend() == "tpu":
+            if pointer_shapes_ok(n, hidden):
+                impl = "pallas"
+            else:
+                _warn_once(
+                    f"ptr-step-{n}-{hidden}",
+                    f"pointer kernel blocks (n={n}, hidden={hidden}) do "
+                    f"not tile to {_SUBLANE}x{_LANE}; using the reference "
+                    "op for this shape")
+                impl = "ref"
+        else:
+            impl = "ref"
     g, p = params["glimpse"], params["pointer"]
     unbatched = C.ndim == 2
     if impl == "ref":
@@ -56,3 +135,11 @@ def make_logits_fn(params, C, *, impl: str | None = None):
         return pointer_step(params, C_, CWg, CWp, h, mask, impl=impl)
 
     return logits_fn
+
+
+def make_decode_fn(*, interpret: bool = False, bf16: bool = False):
+    """Whole-decode builder (see :func:`.decode.make_decode_fn`) —
+    re-exported here so callers select single-step and whole-decode
+    kernels through one module."""
+    from .decode import make_decode_fn as _mk
+    return _mk(interpret=interpret, bf16=bf16)

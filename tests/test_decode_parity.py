@@ -1,0 +1,192 @@
+"""Full ``decode_impl`` parity suite (PR 8).
+
+The serving/training decode now has three implementations — the per-step
+``lax.scan`` (default), the scan with the pure-jnp reference pointer op
+(``logits_impl="ref"``), and the persistent whole-decode Pallas kernel
+(:mod:`repro.kernels.ptr.decode`, interpret mode on CPU CI).  The
+contract: all three emit **bit-identical orders**, greedy AND sampled,
+and padding to a 1x or 2x bucket never changes the valid prefix — swept
+over the property-test DAG corpus and the Table-I DNN graphs.
+
+Float log-probs may differ by reduction rounding between impls (the
+kernel reduces over different block shapes); the ORDER is the contract,
+exactly like the single-step kernel's argmax-agreement test.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompGraph, ptrnet, sample_dag
+from repro.core.batching import BucketedDecoder, bucket_for
+from repro.core.costmodel import PipelineSystem
+from repro.core.dnn_graphs import all_model_graphs
+from repro.core.embedding import embed_dim, embed_graph
+from repro.kernels.ptr import ops as ptr_ops
+
+MAX_DEG = 6
+N_STAGES = 4
+
+# one fixed agent: the parity property is about the decode impls, not
+# about any particular weights
+_PARAMS = ptrnet.init_params(jax.random.PRNGKey(0), embed_dim(MAX_DEG), 32)
+
+_REF_BUILDER = lambda params, C: ptr_ops.make_logits_fn(
+    params, C, impl="ref")
+_KERNEL_BUILDER = lambda params: ptr_ops.make_decode_fn(interpret=True)
+
+# (label, greedy/sample kwargs) for the three decode impls
+_IMPLS = [
+    ("scan", {}),
+    ("ref", {"logits_builder": _REF_BUILDER}),
+    ("kernel", {"decode_builder": _KERNEL_BUILDER}),
+]
+
+
+def _uniform_costs(g: CompGraph) -> CompGraph:
+    n = g.n
+    return dataclasses.replace(
+        g, flops=np.full(n, 1.0e9), param_bytes=np.full(n, 1.0e6),
+        out_bytes=np.full(n, 1.0e5))
+
+
+@st.composite
+def dag_cases(draw, min_n=6, max_n=16):
+    """Same corpus shape as tests/test_properties.py: random DAGs with a
+    ~50% tie-heavy (uniform) cost surface."""
+    n = draw(st.integers(min_n, max_n))
+    deg = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 10_000))
+    g = sample_dag(np.random.default_rng(seed), n=n, deg=deg)
+    if draw(st.booleans()):
+        g = _uniform_costs(g)
+    return g, seed
+
+
+def _inputs(g: CompGraph):
+    return (jnp.asarray(embed_graph(g, MAX_DEG)),
+            jnp.asarray(g.parent_matrix(MAX_DEG)))
+
+
+def _pad(feats, pmat, pad_n):
+    pf = jnp.zeros((pad_n, feats.shape[1]), feats.dtype).at[
+        : feats.shape[0]].set(feats)
+    pp = jnp.full((pad_n, MAX_DEG), -1, jnp.int32).at[
+        : feats.shape[0]].set(pmat)
+    return pf, pp
+
+
+def _orders(feats, pmat, key=None, n_valid=None):
+    """order per impl, as int arrays keyed by impl label."""
+    out = {}
+    for label, kw in _IMPLS:
+        if key is None:
+            o, _, _ = ptrnet.greedy_order(
+                _PARAMS, feats, pmat, True, n_valid, **kw)
+        else:
+            o, _, _ = ptrnet.sample_order(
+                _PARAMS, feats, pmat, key, True, n_valid=n_valid, **kw)
+        out[label] = np.asarray(o)
+    return out
+
+
+@settings(max_examples=8, deadline=None)
+@given(dag_cases(), st.booleans())
+def test_decode_impl_parity_on_corpus(case, double_bucket):
+    g, seed = case
+    feats, pmat = _inputs(g)
+    key = jax.random.PRNGKey(seed)
+
+    greedy = _orders(feats, pmat)
+    sampled = _orders(feats, pmat, key=key)
+    for label in ("ref", "kernel"):
+        assert np.array_equal(greedy["scan"], greedy[label]), \
+            f"greedy orders diverged: scan vs {label}"
+        assert np.array_equal(sampled["scan"], sampled[label]), \
+            f"sampled orders diverged: scan vs {label}"
+
+    # padded == unpadded on the valid prefix, per impl, at 1x/2x buckets
+    pad_n = bucket_for(g.n) * (2 if double_bucket else 1)
+    pf, pp = _pad(feats, pmat, pad_n)
+    greedy_pad = _orders(pf, pp, n_valid=g.n)
+    sampled_pad = _orders(pf, pp, key=key, n_valid=g.n)
+    for label, _ in _IMPLS:
+        assert np.array_equal(greedy[label], greedy_pad[label][: g.n]), \
+            f"{label}: padding changed the greedy decode"
+        assert np.array_equal(sampled[label], sampled_pad[label][: g.n]), \
+            f"{label}: padding changed the sampled decode"
+        assert sorted(greedy_pad[label][: g.n].tolist()) == \
+            list(range(g.n))
+
+
+def _table1_parity(names):
+    models = all_model_graphs()
+    scan = BucketedDecoder(decode_impl="scan")
+    kern = BucketedDecoder(decode_impl="kernel-interpret")
+    system = PipelineSystem(N_STAGES)
+    graphs = [models[m] for m in names]
+    o_scan = scan.greedy_orders(_PARAMS, graphs)
+    o_kern = kern.greedy_orders(_PARAMS, graphs)
+    for name, a, b in zip(names, o_scan, o_kern):
+        assert np.array_equal(a, b), f"{name}: greedy orders diverged"
+    f_scan = scan.fused_schedules(_PARAMS, graphs, N_STAGES, system)
+    f_kern = kern.fused_schedules(_PARAMS, graphs, N_STAGES, system)
+    for name, (oa, aa), (ob, ab) in zip(names, f_scan, f_kern):
+        assert np.array_equal(oa, ob), f"{name}: fused orders diverged"
+        assert np.array_equal(aa, ab), f"{name}: assignments diverged"
+
+
+def test_decode_impl_parity_table1_small():
+    """Fast tier: the two smallest Table-I DNNs through the batched
+    serving paths, scan vs whole-decode kernel."""
+    _table1_parity(["Xception", "ResNet50"])
+
+
+@pytest.mark.slow
+def test_decode_impl_parity_table1_all():
+    """Nightly: all ten Table-I DNNs (buckets up to 1024 run the
+    interpret-mode kernel for seconds each)."""
+    _table1_parity(sorted(all_model_graphs()))
+
+
+def test_bucketed_decoder_kernel_impl_matches_default():
+    """decode_impl routing: a kernel-interpret decoder is output-
+    equivalent to the default (auto -> scan on CPU) decoder on a mixed-
+    size batch, orders and repaired assignments both."""
+    rng = np.random.default_rng(5)
+    graphs = [sample_dag(rng, n=n, deg=3) for n in (7, 12, 20, 30, 30)]
+    system = PipelineSystem(N_STAGES)
+    default = BucketedDecoder()
+    kern = BucketedDecoder(decode_impl="kernel-interpret")
+    for a, b in zip(default.greedy_orders(_PARAMS, graphs),
+                    kern.greedy_orders(_PARAMS, graphs)):
+        assert np.array_equal(a, b)
+    for (oa, aa), (ob, ab) in zip(
+            default.fused_schedules(_PARAMS, graphs, N_STAGES, system),
+            kern.fused_schedules(_PARAMS, graphs, N_STAGES, system)):
+        assert np.array_equal(oa, ob)
+        assert np.array_equal(aa, ab)
+
+
+def test_sampled_rollout_parity_padded_vs_unpadded_kernel():
+    """The kernel's sampled path keeps PR 3's pad-invariance contract:
+    one graph, same key, 1x vs 2x bucket -> identical sampled prefix."""
+    g = sample_dag(np.random.default_rng(11), n=14, deg=3)
+    feats, pmat = _inputs(g)
+    key = jax.random.PRNGKey(123)
+    builder = _KERNEL_BUILDER
+    o_ref, _, _ = ptrnet.sample_order(
+        _PARAMS, feats, pmat, key, True, decode_builder=builder)
+    for mult in (1, 2):
+        pf, pp = _pad(feats, pmat, bucket_for(g.n) * mult)
+        o_pad, lp_pad, ent_pad = ptrnet.sample_order(
+            _PARAMS, pf, pp, key, True, n_valid=g.n,
+            decode_builder=builder)
+        assert np.array_equal(np.asarray(o_ref),
+                              np.asarray(o_pad)[: g.n])
+        assert float(jnp.abs(lp_pad[g.n:]).sum()) == 0.0
+        assert float(jnp.abs(ent_pad[g.n:]).sum()) == 0.0

@@ -461,7 +461,7 @@ def test_warmup_precompiles_expected_bucket_shapes(pool):
         # (n, batch) specs compile synthetic stand-ins; a CompGraph spec
         # compiles the exact program that graph's live traffic will hit
         shapes = svc.warmup([(12, 2), pool[0]], n_stages=N_STAGES)
-        fused = [k for k in shapes if len(k) == 5]   # fused program keys
+        fused = [k for k in shapes if len(k) == 6]   # fused program keys
         assert any(k[0] == 16 and k[1] == 2 for k in fused)
         assert any(k[0] == 16 and k[1] == 1 for k in fused)
         # warmup must not pollute the schedule cache
