@@ -14,7 +14,8 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 BENCHES = ["table1", "fig3", "fig4", "fig5", "partitioner", "kernels",
-           "decode", "roofline", "batched", "train", "traffic", "eval"]
+           "decode", "roofline", "batched", "train", "traffic", "eval",
+           "ingest"]
 
 
 def main() -> int:
@@ -37,9 +38,9 @@ def main() -> int:
 
     from . import (batched_schedule_bench, decode_kernel_bench, eval_grid,
                    fig3_solving_time, fig4_inference_runtime,
-                   fig5_gap_to_optimal, kernels_bench, partitioner_bench,
-                   roofline_table, serve_traffic_bench, table1_graphs,
-                   train_bench)
+                   fig5_gap_to_optimal, ingest_bench, kernels_bench,
+                   partitioner_bench, roofline_table, serve_traffic_bench,
+                   table1_graphs, train_bench)
     mods = {
         "table1": table1_graphs, "fig3": fig3_solving_time,
         "fig4": fig4_inference_runtime, "fig5": fig5_gap_to_optimal,
@@ -47,6 +48,7 @@ def main() -> int:
         "decode": decode_kernel_bench, "roofline": roofline_table,
         "batched": batched_schedule_bench, "train": train_bench,
         "traffic": serve_traffic_bench, "eval": eval_grid,
+        "ingest": ingest_bench,
     }
     if args.smoke and args.only:
         ap.error("--smoke runs the fixed CI subset; drop --only or --smoke")

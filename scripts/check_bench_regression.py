@@ -77,6 +77,15 @@ def main(argv=None) -> int:
                          "generalization tier (eval_grid --gen-only): "
                          "guard the gen_* keys and skip the small-grid "
                          "tables")
+    ap.add_argument("--ingest-fresh", default=None,
+                    help="fresh BENCH_ingest-schema json; guards the "
+                         "real-model ingestion surface: validity / "
+                         "bit-stability / oracle-parity hard flags, the "
+                         "parse-warning ratchet, and ratio floors on the "
+                         "oracle-tier match rate and gap ceilings against "
+                         "--ingest-baseline")
+    ap.add_argument("--ingest-baseline", default=None,
+                    help="checked-in BENCH_ingest.json baseline")
     ap.add_argument("--min-match-rate", type=float, default=None,
                     help="ABSOLUTE floor on match_rate_respect (the "
                          "ratchet: floors only go up — set from the "
@@ -90,10 +99,11 @@ def main(argv=None) -> int:
     metrics = args.metric or ["speedup_traffic"]
     if (args.fresh is None and args.train_fresh is None
             and args.traffic_fresh is None and args.eval_fresh is None
-            and args.serve_fresh is None):
+            and args.serve_fresh is None and args.ingest_fresh is None):
         ap.error("nothing to guard: pass FRESH BASELINE and/or "
                  "--serve-fresh and/or --train-fresh and/or "
-                 "--traffic-fresh and/or --eval-fresh")
+                 "--traffic-fresh and/or --eval-fresh and/or "
+                 "--ingest-fresh")
     if args.fresh is not None and args.baseline is None:
         ap.error("FRESH given without BASELINE")
 
@@ -260,6 +270,48 @@ def main(argv=None) -> int:
                     failed = True
             guard_gap_ceiling("gen_gap_mean_respect")
             guard_gap_ceiling("gen_gap_p95_respect")
+    if args.ingest_fresh:
+        inf = json.loads(Path(args.ingest_fresh).read_text())
+        inb = (json.loads(Path(args.ingest_baseline).read_text())
+               if args.ingest_baseline else {})
+        # hard machine-independent invariants: every scored schedule
+        # dependency-valid, parse+coarsen deterministic within the run,
+        # device oracle bit-identical to the host solver, and the
+        # trained policy still ahead of list scheduling at the
+        # generalization budget
+        for flag in ("ingest_all_valid", "ingest_bit_stable",
+                     "ingest_oracle_parity",
+                     "ingest_gen_respect_beats_list"):
+            if inf.get(flag) is not True:
+                print(f"[guard] FAIL {flag}: ingest invariant broken "
+                      f"({args.ingest_fresh})")
+                failed = True
+        # parse-warning ratchet: a trace may never get NOISIER than the
+        # pinned baseline (both zoo models parse clean today)
+        base_warn = inb.get("ingest_warnings_total", 0)
+        warn = inf.get("ingest_warnings_total")
+        ok = warn is not None and warn <= base_warn
+        print(f"[guard] {'ok' if ok else 'FAIL':4s} "
+              f"ingest_warnings_total <= {base_warn}: fresh={warn}")
+        failed |= not ok
+        # oracle-tier quality: match-rate ratio floor + gap ceilings
+        # (graph content hashes are deliberately NOT compared across
+        # runs — they move with the installed XLA's HLO output)
+        guard_ratio(inf, inb, "ingest_match_rate_respect")
+        for m in ("ingest_gap_mean_respect", "ingest_gen_gap_mean_respect"):
+            if m not in inb:
+                print(f"[guard] SKIP {m}: not in baseline")
+                continue
+            if m not in inf:
+                print(f"[guard] FAIL {m}: missing from fresh summary")
+                failed = True
+                continue
+            ceiling = max(inb[m] / args.min_ratio,
+                          inb[m] * args.min_ratio) + 1e-6
+            status = "FAIL" if inf[m] > ceiling else "ok"
+            failed |= inf[m] > ceiling
+            print(f"[guard] {status:4s} {m}: fresh={inf[m]:.4f} "
+                  f"baseline={inb[m]:.4f} ceiling={ceiling:.4f}")
     # exact-match flags are hard invariants, not ratios.  The smoke flags
     # compare the two serving APIs (batch-of-1 vs batch-of-N programs);
     # the serve summary carries the one vs the HOST reference pipeline;

@@ -176,6 +176,32 @@ class RespectScheduler:
             res["t_total_s"] = time.perf_counter() - t0
         return res
 
+    def schedule_model(
+        self,
+        arch: str,
+        n_stages: int = 4,
+        *,
+        n_nodes: int = 32,
+        smoke: bool = True,
+        kind: str = "prefill",
+        system: PipelineSystem | None = None,
+        use_cache: bool = True,
+    ) -> ScheduleResult:
+        """Schedule a REAL registry model end-to-end: trace it under
+        ``jax.jit``, parse the compiled HLO into per-instruction cost
+        records, coarsen to at most ``n_nodes`` super-nodes
+        (:mod:`repro.ingest`), then run the resulting CompGraph through
+        the standard :meth:`schedule` path — same fused engine, same
+        cache.  The ingest report (timing split, parse warnings, graph
+        stats) rides along under ``result["ingest"]``."""
+        from ..ingest import ingest_model   # deferred: pulls in models/
+        res = ingest_model(arch, n_nodes=n_nodes, smoke=smoke, kind=kind,
+                           max_deg=self.max_deg)
+        out = self.schedule(res.graph, n_stages, system,
+                            use_cache=use_cache)
+        out["ingest"] = dict(res.report)
+        return out
+
     # ------------------------------------------------------------------ #
     # degraded-path entry points (the serving ladder's middle rung)
     # ------------------------------------------------------------------ #

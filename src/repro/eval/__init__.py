@@ -30,8 +30,10 @@ from .report import (  # noqa: F401
 )
 from .runner import MATCH_RTOL, POLICY_NAMES, run_grid, run_scenario  # noqa: F401
 from .scenarios import (  # noqa: F401
+    INGEST_ARCHS,
     SYNTH_FAMILIES,
     Scenario,
+    ingest_scenarios,
     layered_dag,
     scenario_grid,
     synthetic_dag,

@@ -120,7 +120,9 @@ def run_scenario(
     graphs = sc.build()
     k = sc.n_stages
     if keep_graph_records is None:
-        keep_graph_records = sc.family == "dnn"
+        # dnn: the Table-I per-model table; ingest: per-architecture gap
+        # rows for BENCH_ingest.json and the full-grid report
+        keep_graph_records = sc.family in ("dnn", "ingest")
 
     # ---- exact reference: host loop vs batched device program -------- #
     t0 = time.perf_counter()

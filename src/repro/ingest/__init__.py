@@ -1,0 +1,34 @@
+"""Real-model ingestion: JAX zoo model -> compiled HLO -> CompGraph.
+
+The synthetic samplers (:mod:`repro.core.dnn_graphs`, the chain/layered/
+branchy families) gave the schedulers something to train and evaluate on;
+this package closes the loop to *real* programs:
+
+    trace   (:mod:`repro.ingest.trace`)    jit -> lower -> compile any
+                                           registry architecture, dump the
+                                           optimized HLO text;
+    parse   (:mod:`repro.utils.hlo`)       per-instruction cost records
+                                           with operand edges, weight
+                                           attribution and scan expansion;
+    coarsen (:mod:`repro.ingest.coarsen`)  contract the instruction DAG
+                                           into <= |V|max fusion-region
+                                           super-nodes with summed costs;
+    schedule                               the resulting CompGraph goes
+                                           through the SAME
+                                           RespectScheduler.schedule_many
+                                           front end as every synthetic
+                                           graph (see
+                                           RespectScheduler.schedule_model).
+
+``ingest_model`` (:mod:`repro.ingest.pipeline`) is the one-call wrapper.
+"""
+
+from .coarsen import coarsen_program  # noqa: F401
+from .pipeline import IngestResult, ingest_model  # noqa: F401
+from .trace import TraceResult, trace_model  # noqa: F401
+
+__all__ = [
+    "trace_model", "TraceResult",
+    "coarsen_program",
+    "ingest_model", "IngestResult",
+]

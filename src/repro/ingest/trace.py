@@ -1,0 +1,74 @@
+"""Trace a registry architecture to optimized HLO text.
+
+``trace_model("whisper-tiny")`` builds the model exactly the way the
+launcher does (``build_model`` + ``input_specs``), lowers the forward pass
+under ``jax.jit`` against ShapeDtypeStruct stand-ins (no parameter
+allocation — ``jax.eval_shape`` provides the params pytree), compiles, and
+returns ``compiled.as_text()``: the same per-device optimized module the
+dry-run analyzer consumes.
+
+Smoke configs (the default) keep CPU compiles in the seconds range for
+every architecture; full configs work too but are only sensible on a box
+with the memory to lower them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from ..configs import ShapeConfig, get_config, get_smoke_config
+from ..models.model import build_model
+
+__all__ = ["TraceResult", "trace_model"]
+
+TRACE_KINDS = ("prefill", "train")
+
+
+@dataclasses.dataclass
+class TraceResult:
+    arch: str
+    kind: str
+    batch: int
+    seq_len: int
+    hlo_text: str
+    t_lower_s: float
+    t_compile_s: float
+
+
+def trace_model(arch: str, *, smoke: bool = True, kind: str = "prefill",
+                batch: int = 1, seq_len: int = 16) -> TraceResult:
+    """Lower + compile one architecture's forward (or train-loss) program
+    and return its optimized HLO text with timing splits."""
+    if kind not in TRACE_KINDS:
+        raise ValueError(f"kind must be one of {TRACE_KINDS}, got {kind!r}")
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    if cfg.family == "vlm":
+        # VLM text length = seq_len - n_patches must stay positive
+        seq_len = max(seq_len, cfg.n_patches + 8)
+    model = build_model(cfg, remat=False)
+    shape = ShapeConfig("ingest", seq_len, batch, "prefill")
+    specs, _axes = model.input_specs(shape)
+    p_shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+    if kind == "prefill":
+        def fwd(params, batch_in):
+            logits, _cache = model.prefill(params, batch_in)
+            return logits
+    else:
+        def fwd(params, batch_in):
+            return model.loss(params, batch_in)
+
+    t0 = time.perf_counter()
+    lowered = jax.jit(fwd).lower(p_shapes, specs)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+    return TraceResult(
+        arch=arch, kind=kind, batch=batch, seq_len=seq_len,
+        hlo_text=compiled.as_text(),
+        t_lower_s=t_lower, t_compile_s=t_compile,
+    )

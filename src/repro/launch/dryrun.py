@@ -25,6 +25,7 @@ from ..configs import (ARCH_IDS, SHAPES, TrainConfig, get_config,  # noqa: E402
                        shape_applicable)
 from ..models.model import analytic_flops, build_model  # noqa: E402
 from ..utils.hlo import analyze_hlo  # noqa: E402
+from ..utils.jaxcompat import cost_analysis, set_mesh  # noqa: E402
 from . import steps  # noqa: E402
 from .mesh import make_production_mesh  # noqa: E402
 from .roofline import roofline_from_cost  # noqa: E402
@@ -70,7 +71,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
               "mesh": "multi" if multi_pod else "single", "chips": chips}
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if shape.kind == "train":
             tcfg = train_config(arch)
             jfn, (p_sh, o_sh, b_sh), optimizer = steps.make_train_step(
@@ -105,7 +106,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                                    + mem.output_size_in_bytes
                                    + mem.temp_size_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis(compiled)
     record["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
                           "bytes": float(ca.get("bytes accessed", 0.0))}
 

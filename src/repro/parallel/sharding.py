@@ -152,12 +152,21 @@ def constrain(x, logical_axes, mesh: Mesh | None = None, rules=None):
 
 
 def _inside_manual_context() -> bool:
+    # new JAX: the ambient abstract mesh carries Manual axis types
     try:
         from jax._src import mesh as mesh_lib
         am = mesh_lib.get_abstract_mesh()
-        if am is None or am.empty:
-            return False
-        return any(t == jax.sharding.AxisType.Manual for t in am.axis_types)
+        if am is not None and not isinstance(am, tuple) and not am.empty:
+            if any(t == jax.sharding.AxisType.Manual for t in am.axis_types):
+                return True
+    except Exception:  # pragma: no cover
+        pass
+    # JAX 0.4.x: get_abstract_mesh() returns () even inside shard_map;
+    # there, manual regions are exactly where named mesh axes are bound
+    # in the axis env (shard_map/pmap bodies).
+    try:
+        from jax._src import core as core_src
+        return bool(core_src.nonempty_axis_env())
     except Exception:  # pragma: no cover
         return False
 
@@ -168,9 +177,18 @@ def _current_mesh() -> Mesh | None:
     resources)."""
     try:
         from jax._src import mesh as mesh_lib
+    except Exception:  # pragma: no cover
+        return None
+    # each lookup is independently guarded: on JAX 0.4.x
+    # get_concrete_mesh() returns an empty TUPLE (no .empty attribute),
+    # which must not mask the legacy thread-resources mesh below it.
+    try:
         mesh = mesh_lib.get_concrete_mesh()
-        if mesh is not None and not mesh.empty:
+        if isinstance(mesh, Mesh) and not mesh.empty:
             return mesh
+    except Exception:  # pragma: no cover
+        pass
+    try:
         mesh = mesh_lib.thread_resources.env.physical_mesh
         return None if mesh.empty else mesh
     except Exception:  # pragma: no cover

@@ -38,7 +38,8 @@ import dataclasses
 import re
 from collections import defaultdict
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "HloCost", "analyze_hlo_instructions",
+           "InstrRecord", "HloProgram"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -244,23 +245,40 @@ def _conv_flops(instr: _Instr, symtab: dict[str, str]) -> float:
 
 def _loop_trip_count(cond_instrs: list[_Instr]) -> float:
     """Trip count from the condition's comparison constant (scan loops
-    compare the induction var against a constant)."""
+    compare the induction var against a constant).  Hardened: any malformed
+    constant / comparison line falls through to the 1.0 default instead of
+    raising mid-trace (newer jaxlib dumps vary the constant spelling)."""
     consts = {}
-    for ins in cond_instrs:
-        if ins.op == "constant":
-            m = re.search(r"constant\((-?\d+)\)", ins.rest and
-                          f"constant({ins.rest}" or "")
-            # rest holds e.g. "64)" — normalize:
-            m2 = re.match(r"(-?\d+)\)", ins.rest.strip())
-            if m2:
-                consts[ins.name] = int(m2.group(1))
-    for ins in cond_instrs:
-        if ins.op == "compare":
-            args = re.findall(r"%?([\w.\-]+)", ins.rest.split(")")[0])
-            for a in args:
-                if a in consts and consts[a] > 0:
-                    return float(consts[a])
+    try:
+        for ins in cond_instrs:
+            if ins.op == "constant":
+                m = re.match(r"(-?\d+)\)", ins.rest.strip())
+                if m:
+                    consts[ins.name] = int(m.group(1))
+        for ins in cond_instrs:
+            if ins.op == "compare":
+                args = re.findall(r"%?([\w.\-]+)", ins.rest.split(")")[0])
+                for a in args:
+                    if a in consts and consts[a] > 0:
+                        return float(consts[a])
+    except Exception:  # pragma: no cover - defensive against dump drift
+        pass
     return 1.0
+
+
+def _while_trips(ins: _Instr, comps: dict[str, list[_Instr]]
+                 ) -> tuple[float, bool]:
+    """(trip count, known?) for a ``while`` op.  XLA annotates scans with
+    ``known_trip_count``; otherwise fall back to the condition's comparison
+    constant.  ``known=False`` means the caller should count a warning."""
+    mt = _TRIP_RE.search(ins.rest)
+    if mt:
+        return float(mt.group(1)), True
+    cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+    if cond and cond.group(1) in comps:
+        trips = _loop_trip_count(comps[cond.group(1)])
+        return trips, trips > 1.0
+    return 1.0, False
 
 
 def analyze_hlo(text: str) -> HloCost:
@@ -357,14 +375,7 @@ def analyze_hlo(text: str) -> HloCost:
             op = ins.op
             if op == "while":
                 body = re.search(r"body=%?([\w.\-]+)", ins.rest)
-                cond = re.search(r"condition=%?([\w.\-]+)", ins.rest)
-                mt = _TRIP_RE.search(ins.rest)
-                if mt:  # XLA annotates scans: known_trip_count
-                    trips = float(mt.group(1))
-                elif cond and cond.group(1) in comps:
-                    trips = _loop_trip_count(comps[cond.group(1)])
-                else:
-                    trips = 1.0
+                trips, _known = _while_trips(ins, comps)
                 if body:
                     sub = comp_cost(body.group(1), stack + (name,),
                                     include_bytes=include_bytes)
@@ -440,3 +451,332 @@ def analyze_hlo(text: str) -> HloCost:
         return total
 
     return comp_cost(entry)
+
+
+# --------------------------------------------------------------------------- #
+# Per-instruction analysis (the ingest pipeline's front half)
+# --------------------------------------------------------------------------- #
+#
+# ``analyze_hlo`` answers "how much work is this whole program" — one
+# aggregate HloCost.  The ingest pipeline needs the *structure*: which
+# instruction produced which tensor, consumed by whom, carrying how many
+# weight bytes.  ``analyze_hlo_instructions`` re-walks the same parsed
+# computations and emits one :class:`InstrRecord` per compute instruction,
+# with:
+#
+# * zero-cost plumbing ops (parameter / tuple / get-tuple-element / bitcast /
+#   convert / copy / reshape / transpose / broadcast / constant / iota)
+#   folded into edges — they never become records, their producers' deps
+#   flow through;
+# * weight attribution from entry-parameter ``metadata op_name`` pytree
+#   paths: ``params[...]`` parameters are weights, anything else
+#   (``batch[...]``, rng keys) is streamed input.  A weight's bytes are
+#   charged to its FIRST consuming record (per loop-instance, see below);
+# * ``while`` expansion: a scan body with a known trip count is inlined
+#   once per iteration, with the carry tuple's elements mapped through
+#   (body parameter GTEs <- carry elements; body ROOT tuple -> next
+#   iteration's carry) — so a 4-layer scanned transformer yields 4 copies
+#   of the layer subgraph in sequence, exactly what a pipeline partitioner
+#   needs.  Weights carried through the scan (stacked layer parameters)
+#   are charged 1/trips per iteration, conserving total weight bytes while
+#   attributing each layer's share to the iteration that reads it.  Loops
+#   too big to expand (trips x body size > node budget) collapse to one
+#   aggregate record with the full trip-multiplied FLOPs;
+# * hardening: an opcode outside the known set falls back to "charge output
+#   bytes, zero FLOPs" and bumps ``warnings['unknown_opcode']``; any
+#   per-instruction parse error bumps ``warnings['instr_error']`` and emits
+#   the same fallback record — a newer-jaxlib dump degrades gracefully
+#   instead of raising mid-trace.
+
+_PASSTHROUGH_OPS = {
+    "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+    "after-all", "iota", "partition-id", "replica-id", "copy-start",
+    "copy-done", "convert", "copy", "reshape", "transpose", "broadcast",
+    "get-dimension-size", "opt-barrier", "add-dependency", "domain",
+}
+
+# opcodes we price deliberately (everything else -> unknown_opcode fallback,
+# which charges output bytes with zero FLOPs — correct for elementwise ops
+# we simply haven't listed, conservative for exotic custom-calls)
+_KNOWN_NODE_OPS = {
+    "dot", "convolution", "fusion", "call", "custom-call", "map", "reduce",
+    "reduce-window", "scatter", "gather", "sort", "conditional", "while",
+    "select-and-scatter", "dynamic-slice", "dynamic-update-slice", "slice",
+    "pad", "concatenate", "reverse", "select", "compare", "clamp", "add",
+    "subtract", "multiply", "divide", "maximum", "minimum", "negate", "abs",
+    "sign", "floor", "ceil", "round-nearest-afz", "remainder", "and", "or",
+    "xor", "not", "is-finite", "exponential", "exponential-minus-one",
+    "log", "log-plus-one", "tanh", "rsqrt", "sqrt", "cbrt", "power",
+    "logistic", "sine", "cosine", "tan", "atan2", "real", "imag", "complex",
+    "reduce-precision", "rng", "rng-bit-generator", "bitcast-convert",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "population-count", "count-leading-zeros", "stochastic-convert",
+    "cholesky", "triangular-solve", "fft",
+} | set(COLLECTIVES) \
+  | {c + "-start" for c in COLLECTIVES} | {c + "-done" for c in COLLECTIVES}
+
+_CALLS_RE = re.compile(
+    r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-]+)")
+_PARAM_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+# the real operand index trails the operand list (", index=N"); long tuple
+# TYPES inlined before it carry "/*index=N*/" position comments — the
+# lookbehind skips those.
+_GTE_INDEX_RE = re.compile(r"(?<!\*)index=(\d+)")
+
+
+@dataclasses.dataclass
+class _WeightRef:
+    """One entry weight parameter; ``charged`` tracks which loop instances
+    have billed their share so bytes are conserved across consumers."""
+    bytes: float
+    path: str
+    charged: set = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class _Val:
+    """What we know about one HLO value while walking: which emitted
+    records it transitively depends on, which (not-yet-charged) weights
+    feed it, and — for tuples — per-element breakdowns."""
+    deps: frozenset = frozenset()
+    weights: tuple = ()
+    elems: list | None = None
+
+
+_EMPTY_VAL = _Val()
+
+
+def _merge_vals(vals: list["_Val"]) -> "_Val":
+    if not vals:
+        return _EMPTY_VAL
+    if len(vals) == 1:
+        return _Val(vals[0].deps, vals[0].weights, vals[0].elems)
+    deps: frozenset = frozenset().union(*[v.deps for v in vals])
+    weights: list = []
+    seen = set()
+    for v in vals:
+        for w in v.weights:
+            if id(w) not in seen:
+                seen.add(id(w))
+                weights.append(w)
+    return _Val(deps, tuple(weights))
+
+
+@dataclasses.dataclass
+class InstrRecord:
+    """One compute instruction (post plumbing-fold / loop expansion)."""
+    name: str
+    opcode: str
+    flops: float
+    out_bytes: float
+    param_bytes: float
+    operands: tuple    # producer record names, each emitted earlier
+
+
+@dataclasses.dataclass
+class HloProgram:
+    """Per-instruction view of one compiled HLO module, topologically
+    ordered (operands always precede their consumers)."""
+    instructions: list
+    entry: str | None
+    n_raw_instructions: int
+    warnings: dict = dataclasses.field(default_factory=dict)
+    notes: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_warnings(self) -> int:
+        return int(sum(self.warnings.values()))
+
+    def totals(self) -> dict:
+        return {
+            "flops": float(sum(r.flops for r in self.instructions)),
+            "out_bytes": float(sum(r.out_bytes for r in self.instructions)),
+            "param_bytes": float(
+                sum(r.param_bytes for r in self.instructions)),
+        }
+
+
+def analyze_hlo_instructions(text: str, *, expand_while: bool = True,
+                             node_budget: int = 4096) -> HloProgram:
+    """Parse compiled HLO text into per-instruction cost records.
+
+    Never raises on malformed input: parse problems degrade to fallback
+    records and show up in ``HloProgram.warnings``.
+    """
+    comps = _parse_computations(text)
+    entry = _entry_name(text)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return HloProgram([], None, 0, warnings={"no_entry": 1})
+
+    records: list[InstrRecord] = []
+    warnings: dict[str, int] = {}
+    notes: dict[str, int] = {}
+
+    def warn(key: str):
+        warnings[key] = warnings.get(key, 0) + 1
+
+    def note(key: str, n: int = 1):
+        notes[key] = notes.get(key, 0) + n
+
+    # flops-only computation cost (for fusion/call/aggregated-while records)
+    fmemo: dict[str, float] = {}
+
+    def flops_only(name: str, stack=()) -> float:
+        if name in fmemo:
+            return fmemo[name]
+        if name not in comps or name in stack:
+            return 0.0
+        total = 0.0
+        symtab = {i.name: i.type_str for i in comps[name]}
+        for ins in comps[name]:
+            if ins.op == "dot":
+                total += _dot_flops(ins, symtab)
+            elif ins.op == "convolution":
+                total += _conv_flops(ins, symtab)
+            elif ins.op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                trips, _ = _while_trips(ins, comps)
+                if body:
+                    total += trips * flops_only(body.group(1), stack + (name,))
+            else:
+                for sub in _CALLS_RE.findall(ins.rest):
+                    total += flops_only(sub, stack + (name,))
+        fmemo[name] = total
+        return total
+
+    def charge_weights(val: _Val, instance: str, frac: float) -> float:
+        """Bill this value's not-yet-charged weight bytes (per loop
+        instance, scaled by 1/trips inside expanded loops)."""
+        billed = 0.0
+        for w in val.weights:
+            if instance not in w.charged:
+                w.charged.add(instance)
+                billed += w.bytes * frac
+        return billed
+
+    def emit(name: str, opcode: str, flops: float, out_bytes: float,
+             param_bytes: float, deps: frozenset) -> _Val:
+        records.append(InstrRecord(
+            name=name, opcode=opcode, flops=float(flops),
+            out_bytes=float(out_bytes), param_bytes=float(param_bytes),
+            operands=tuple(sorted(deps))))
+        return _Val(deps=frozenset((name,)))
+
+    def walk(comp_name: str, env: dict, prefix: str, frac: float,
+             depth: int) -> _Val:
+        """Walk one computation instance; returns the ROOT's value."""
+        instrs = comps.get(comp_name, [])
+        symtab = {i.name: i.type_str for i in instrs}
+        vals: dict[str, _Val] = {}
+        root_val = _EMPTY_VAL
+        for ins in instrs:
+            try:
+                v = _walk_instr(ins, symtab, vals, env, prefix, frac, depth)
+            except Exception:
+                warn("instr_error")
+                v = emit(prefix + ins.name, ins.op, 0.0,
+                         _shape_bytes(ins.type_str), 0.0,
+                         _merge_vals([vals[a] for a in
+                                      _operand_names(ins, symtab)
+                                      if a in vals]).deps)
+            vals[ins.name] = v
+            if ins.is_root:
+                root_val = v
+        if root_val is _EMPTY_VAL and instrs:
+            root_val = vals.get(instrs[-1].name, _EMPTY_VAL)
+        return root_val
+
+    def _walk_instr(ins: _Instr, symtab: dict, vals: dict, env: dict,
+                    prefix: str, frac: float, depth: int) -> _Val:
+        op = ins.op
+        operand_vals = [vals[a] for a in _operand_names(ins, symtab)
+                        if a in vals]
+
+        if op == "parameter":
+            m = re.match(r"(\d+)", ins.rest)
+            idx = int(m.group(1)) if m else 0
+            if depth > 0:       # bound by the expanding caller
+                return env.get(idx, _EMPTY_VAL)
+            pm = _PARAM_OPNAME_RE.search(ins.rest)
+            path = pm.group(1) if pm else ""
+            if path.startswith("params"):
+                return _Val(weights=(
+                    _WeightRef(float(_shape_bytes(ins.type_str)), path),))
+            return _EMPTY_VAL   # streamed input (batch / rng / step count)
+
+        if op == "tuple":
+            merged = _merge_vals(operand_vals)
+            return _Val(merged.deps, merged.weights, list(operand_vals))
+
+        if op == "get-tuple-element":
+            src = operand_vals[0] if operand_vals else _EMPTY_VAL
+            mi = _GTE_INDEX_RE.search(ins.rest)
+            if src.elems is not None and mi is not None:
+                idx = int(mi.group(1))
+                if 0 <= idx < len(src.elems):
+                    return src.elems[idx]
+            return _Val(src.deps, src.weights)
+
+        if op in _PASSTHROUGH_OPS:
+            merged = _merge_vals(operand_vals)
+            # single-operand structural ops (copy/bitcast of a tuple)
+            # preserve element structure
+            if len(operand_vals) == 1 and operand_vals[0].elems is not None:
+                merged.elems = operand_vals[0].elems
+            return merged
+
+        if op == "while":
+            return _walk_while(ins, symtab, operand_vals, prefix, frac,
+                               depth)
+
+        # ---- a real compute record --------------------------------------
+        if op not in _KNOWN_NODE_OPS:
+            warn("unknown_opcode")
+            merged = _merge_vals(operand_vals)
+            pb = charge_weights(merged, prefix, frac)
+            return emit(prefix + ins.name, op, 0.0,
+                        _shape_bytes(ins.type_str), pb, merged.deps)
+
+        flops = 0.0
+        if op == "dot":
+            flops = _dot_flops(ins, symtab)
+        elif op == "convolution":
+            flops = _conv_flops(ins, symtab)
+        else:
+            for sub in _CALLS_RE.findall(ins.rest):
+                flops += flops_only(sub)
+        merged = _merge_vals(operand_vals)
+        pb = charge_weights(merged, prefix, frac)
+        return emit(prefix + ins.name, op, flops,
+                    _shape_bytes(ins.type_str), pb, merged.deps)
+
+    def _walk_while(ins: _Instr, symtab: dict, operand_vals: list,
+                    prefix: str, frac: float, depth: int) -> _Val:
+        body_m = re.search(r"body=%?([\w.\-]+)", ins.rest)
+        body = body_m.group(1) if body_m else None
+        trips, known = _while_trips(ins, comps)
+        if not known:
+            warn("trip_count_fallback")
+        carry = operand_vals[0] if operand_vals else _EMPTY_VAL
+        body_size = len(comps.get(body, ())) if body else 0
+        expandable = (
+            expand_while and body in comps and depth < 8 and trips >= 1
+            and len(records) + trips * max(body_size, 1) <= node_budget)
+        if not expandable:
+            merged = _merge_vals(operand_vals)
+            pb = charge_weights(merged, prefix, frac)
+            fl = trips * flops_only(body) if body else 0.0
+            note("aggregated_loops")
+            return emit(prefix + ins.name, "while", fl,
+                        _shape_bytes(ins.type_str), pb, merged.deps)
+        note("expanded_loops")
+        for t in range(int(trips)):
+            carry = walk(body, {0: carry}, f"{prefix}{ins.name}.t{t}.",
+                         frac / trips, depth + 1)
+        return carry
+
+    n_raw = len(comps.get(entry, ()))
+    walk(entry, {}, "", 1.0, 0)
+    return HloProgram(records, entry, n_raw, warnings=warnings, notes=notes)

@@ -1,0 +1,90 @@
+"""Version-compat shims over JAX APIs that moved between 0.4.x and 0.5+.
+
+The repo targets the installed toolchain (JAX 0.4.37 on this image) while
+staying forward-compatible with the renamed public APIs newer JAX ships:
+
+* ``jax.sharding.AxisType``      — absent on 0.4.x; every mesh axis is
+  implicitly Auto there, so :func:`make_mesh_auto` simply omits the kwarg;
+* ``jax.set_mesh(mesh)``         — 0.4.x spells the ambient-mesh context
+  ``with mesh:`` (thread-resources env); :func:`set_mesh` dispatches;
+* ``jax.shard_map(..., check_vma=)`` — 0.4.x has
+  ``jax.experimental.shard_map.shard_map(..., check_rep=)``;
+  :func:`shard_map` maps the kwarg and supports both call styles
+  (direct and ``functools.partial``-as-decorator);
+* ``compiled.cost_analysis()``  — 0.4.x returns a LIST of per-program
+  dicts, newer JAX returns the dict directly; :func:`cost_analysis`
+  always hands back one dict.
+
+Pinned by ``tests/test_jaxcompat.py`` so a toolchain bump that breaks the
+shim fails loudly instead of resurfacing as AttributeErrors deep inside a
+subprocess test.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh_auto", "set_mesh", "shard_map", "cost_analysis"]
+
+
+def make_mesh_auto(shape, axes):
+    """``jax.make_mesh`` with every axis explicitly Auto where the concept
+    exists (JAX >= 0.5), plain ``make_mesh`` where it doesn't (0.4.x, where
+    Auto is the only behaviour)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(
+        shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager: ``jax.set_mesh`` when the new API
+    exists, the legacy ``with mesh:`` thread-resources context otherwise.
+
+    Both styles are readable by ``repro.parallel.sharding._current_mesh``,
+    so ``constrain`` resolves logical axes identically under either."""
+    new = getattr(jax, "set_mesh", None)
+    if new is not None:
+        return new(mesh)
+    # Mesh has been a context manager since the pjit era; entering it
+    # populates thread_resources.env.physical_mesh.
+    return mesh
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs, check_vma=None):
+    """Dispatch to ``jax.shard_map`` (new) or
+    ``jax.experimental.shard_map.shard_map`` (0.4.x), translating the
+    replication-check kwarg (``check_vma`` <-> ``check_rep``).
+
+    Usable as ``shard_map(f, mesh=..., ...)`` or partially applied
+    (``functools.partial(shard_map, mesh=..., ...)`` as a decorator).
+    """
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        impl = new
+    else:
+        from jax.experimental.shard_map import shard_map as impl
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+    if f is None:
+        def deco(fn):
+            return impl(fn, **kwargs)
+        return deco
+    return impl(f, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: one flat dict of XLA cost
+    properties regardless of JAX version (0.4.x wraps it in a one-element
+    list per executable program)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -1,0 +1,82 @@
+"""Pin the JAX version-compat shim (repro.utils.jaxcompat).
+
+These run on the fast tier with ONE device — they exercise the dispatch
+logic, not multi-device semantics (that's tests/test_distributed.py's
+subprocess job).  A toolchain bump that removes either the new or the old
+spelling of an API must fail HERE, by name, instead of as an
+AttributeError buried in a subprocess stderr dump.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import small_test_mesh
+from repro.utils.jaxcompat import (cost_analysis, make_mesh_auto, set_mesh,
+                                   shard_map)
+
+
+def test_make_mesh_auto_single_device():
+    mesh = make_mesh_auto((1,), ("data",))
+    assert mesh.shape == {"data": 1}
+    # on JAX with AxisType, every axis must be Auto; without it, the
+    # kwarg must simply be absent (no AttributeError either way)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        assert all(t == axis_type.Auto for t in mesh.axis_types)
+
+
+def test_small_test_mesh_uses_shim():
+    # the production mesh constructors route through make_mesh_auto; on
+    # this box a (1, 1) mesh is constructible regardless of JAX version
+    mesh = small_test_mesh(data=1, model=1)
+    assert mesh.size == 1
+
+
+def test_set_mesh_context_resolves_ambient_mesh():
+    from repro.parallel.sharding import _current_mesh
+    mesh = make_mesh_auto((1,), ("data",))
+    with set_mesh(mesh):
+        seen = _current_mesh()
+        assert seen is not None and not seen.empty
+        assert tuple(seen.axis_names) == ("data",)
+    # context exit restores "no ambient mesh" (or at least not ours)
+    after = _current_mesh()
+    assert after is None or after.empty or after is not mesh
+
+
+def test_shard_map_direct_and_partial_styles():
+    mesh = make_mesh_auto((1,), ("data",))
+    x = jnp.asarray(np.arange(8.0).reshape(4, 2))
+
+    def double(v):
+        return v * 2.0
+
+    direct = shard_map(double, mesh=mesh, in_specs=P("data"),
+                       out_specs=P("data"), check_vma=False)
+    deco = shard_map(mesh=mesh, in_specs=P("data"),
+                     out_specs=P("data"), check_vma=False)(double)
+    np.testing.assert_array_equal(np.asarray(direct(x)), np.asarray(x) * 2)
+    np.testing.assert_array_equal(np.asarray(deco(x)), np.asarray(x) * 2)
+
+
+def test_cost_analysis_returns_flat_dict():
+    # 0.4.x returns [dict]; newer returns dict — the shim always flattens
+    compiled = jax.jit(lambda a, b: a @ b).lower(
+        jnp.ones((8, 8)), jnp.ones((8, 8))).compile()
+    ca = cost_analysis(compiled)
+    assert isinstance(ca, dict)
+    assert float(ca.get("flops", 0.0)) > 0.0
+
+
+def test_shard_map_psum_single_device():
+    mesh = make_mesh_auto((1,), ("data",))
+    x = jnp.ones((2, 3))
+
+    def f(v):
+        return jax.lax.psum(v, "data")
+
+    out = shard_map(f, mesh=mesh, in_specs=P("data"),
+                    out_specs=P("data"), check_vma=False)(x)
+    np.testing.assert_array_equal(np.asarray(out), np.ones((2, 3)))
