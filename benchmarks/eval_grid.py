@@ -10,7 +10,12 @@ to the true monotone optimum on small graphs), PLUS the large-graph
 100-500 graphs — far beyond the trained release's |V| <= 50 curriculum —
 scored differentially against the exact-DP-refined best-known reference
 and the list/compiler baselines (``--gen-only`` runs just this tier;
-``--no-gen`` skips it).
+``--no-gen`` skips it), PLUS the **heterogeneous-system tier**
+(:func:`repro.eval.scenarios.hetero_grid`): per-stage cost profiles and
+hard per-stage memory budgets scored against the same exact oracle over
+the generalized DP, folded into the artifact under ``hetero_*`` keys
+with a hard ``all_capacity_feasible`` flag (``--hetero-only`` runs just
+this tier — the CI hetero-smoke row; ``--no-hetero`` skips it).
 
 Writes ``BENCH_eval.json`` (checked in, pinned with the TRAINED release
 agent; ``scripts/check_bench_regression.py --eval-fresh/--eval-baseline``
@@ -27,10 +32,11 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.eval import (check_generalization, check_results,  # noqa: E402
-                        emit_lines, run_generalization, run_grid,
-                        scenario_grid, summarize_generalization,
-                        write_report)
+from repro.eval import (check_generalization, check_hetero,  # noqa: E402
+                        check_results, emit_lines, hetero_grid,
+                        run_generalization, run_grid, scenario_grid,
+                        summarize, summarize_generalization,
+                        summarize_hetero)
 
 from .common import emit, load_agent  # noqa: E402
 
@@ -55,8 +61,20 @@ def _emit_gen(gen: dict) -> None:
          f"valid={gen['gen_all_valid']}")
 
 
+def _hetero_emit(name: str, us: float, derived: str) -> None:
+    """Bench-emitter wrapper for the hetero tier: per-scenario rows are
+    already distinct (eval/hetero/*, eval/memcap/*); only the aggregate
+    rows would collide with the uniform grid's, so rename those."""
+    if name.startswith("eval/aggregate") or name == "eval/oracle_total":
+        name = name.replace("eval/", "eval/hetero_", 1)
+    emit(name, us, derived)
+
+
 def run(smoke: bool = False, out_json: str | Path | None = None,
-        check: bool = False, gen: bool = True, gen_only: bool = False):
+        check: bool = False, gen: bool = True, gen_only: bool = False,
+        hetero: bool = True, hetero_only: bool = False):
+    import json
+
     sched, trained = load_agent()
     meta = {"smoke": smoke, "trained_agent": trained,
             "bb_max_n": BB_MAX_N}
@@ -64,16 +82,30 @@ def run(smoke: bool = False, out_json: str | Path | None = None,
     summary = None
 
     gen_results = None
-    if gen or gen_only:
+    if (gen or gen_only) and not hetero_only:
         gen_results = run_generalization(sched, smoke=smoke)
         _emit_gen(gen_results)
         problems += check_generalization(gen_results)
 
+    hetero_results = None
+    if (hetero or hetero_only) and not gen_only:
+        hsc = hetero_grid(smoke=smoke)
+        hetero_results = run_grid(hsc, sched, bb_max_n=BB_MAX_N,
+                                  bb_budget_s=BB_BUDGET_S)
+        emit_lines(hetero_results, _hetero_emit)
+        problems += check_hetero(hetero_results)
+
     if gen_only:
         if out_json is not None:
-            import json
             payload = dict(meta)
             payload.update(summarize_generalization(gen_results))
+            Path(out_json).write_text(json.dumps(payload, indent=1) + "\n")
+            print(f"# wrote {out_json}")
+            summary = payload
+    elif hetero_only:
+        if out_json is not None:
+            payload = dict(meta)
+            payload.update(summarize_hetero(hetero_results))
             Path(out_json).write_text(json.dumps(payload, indent=1) + "\n")
             print(f"# wrote {out_json}")
             summary = payload
@@ -85,8 +117,10 @@ def run(smoke: bool = False, out_json: str | Path | None = None,
         emit_lines(results, emit)
         problems += check_results(results)
         if out_json is not None:
-            summary = write_report(results, out_json, meta,
-                                   generalization=gen_results)
+            summary = summarize(results, meta, generalization=gen_results)
+            if hetero_results is not None:
+                summary.update(summarize_hetero(hetero_results))
+            Path(out_json).write_text(json.dumps(summary, indent=1) + "\n")
             print(f"# wrote {out_json}")
         else:
             summary = results
@@ -115,11 +149,22 @@ def main() -> int:
                          "(the CI generalization smoke row)")
     ap.add_argument("--no-gen", action="store_true",
                     help="skip the generalization tier")
+    ap.add_argument("--hetero-only", action="store_true",
+                    help="run ONLY the heterogeneous-system tier "
+                         "(per-stage cost profiles + hard memory budgets; "
+                         "the CI hetero-smoke row)")
+    ap.add_argument("--no-hetero", action="store_true",
+                    help="skip the heterogeneous-system tier")
     args = ap.parse_args()
-    out = args.out_json or ("BENCH_eval.json"
-                            if args.smoke and not args.gen_only else None)
+    if args.gen_only and args.hetero_only:
+        ap.error("--gen-only and --hetero-only are mutually exclusive")
+    out = args.out_json or (
+        "BENCH_eval.json"
+        if args.smoke and not args.gen_only and not args.hetero_only
+        else None)
     run(smoke=args.smoke, out_json=out, check=args.check,
-        gen=not args.no_gen, gen_only=args.gen_only)
+        gen=not args.no_gen, gen_only=args.gen_only,
+        hetero=not args.no_hetero, hetero_only=args.hetero_only)
     return 0
 
 

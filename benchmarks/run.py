@@ -53,7 +53,7 @@ def main() -> int:
     if args.smoke and args.only:
         ap.error("--smoke runs the fixed CI subset; drop --only or --smoke")
     print("name,us_per_call,derived")
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.smoke:
         batched_schedule_bench.run(
             smoke=True, out_json=args.out_json or "BENCH_smoke.json",
@@ -70,7 +70,7 @@ def main() -> int:
                                out_serve_json=args.out_serve_json)
             else:
                 mods[name].run()
-    print(f"# total {time.time()-t0:.1f}s")
+    print(f"# total {time.perf_counter()-t0:.1f}s")
     return 0
 
 

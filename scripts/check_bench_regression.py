@@ -77,6 +77,12 @@ def main(argv=None) -> int:
                          "generalization tier (eval_grid --gen-only): "
                          "guard the gen_* keys and skip the small-grid "
                          "tables")
+    ap.add_argument("--hetero-only", action="store_true",
+                    help="the fresh eval artifact carries only the "
+                         "heterogeneous-system tier (eval_grid "
+                         "--hetero-only): guard the hetero_* keys and the "
+                         "all_capacity_feasible hard flag, skip the "
+                         "uniform-grid tables")
     ap.add_argument("--ingest-fresh", default=None,
                     help="fresh BENCH_ingest-schema json; guards the "
                          "real-model ingestion surface: validity / "
@@ -218,7 +224,7 @@ def main(argv=None) -> int:
         # quality floors: match rates must not collapse (ratio guard, like
         # the throughput metrics — a match rate is a rate, so the relative
         # floor transfers across machines)
-        if not args.gen_only:
+        if not args.gen_only and not args.hetero_only:
             for m in ("match_rate_respect", "match_rate_compiler",
                       "match_rate_list"):
                 guard_ratio(ef, eb, m)
@@ -256,11 +262,29 @@ def main(argv=None) -> int:
                           f"{below}: schedule scored below the true "
                           f"monotone optimum ({args.eval_fresh})")
                     failed = True
+        # heterogeneous-system tier: guarded whenever the fresh artifact
+        # carries it (always under --hetero-only; otherwise a baseline
+        # pinning hetero keys requires the fresh run to have them).
+        # all_capacity_feasible is a machine-independent hard flag: no
+        # respect/oracle schedule may ever exceed a stage's mem_capacity.
+        has_het = ("hetero_match_rate_respect" in ef or args.hetero_only
+                   or "hetero_match_rate_respect" in eb)
+        if has_het and not args.gen_only:
+            for flag in ("hetero_oracle_parity", "hetero_all_valid",
+                         "all_capacity_feasible"):
+                if ef.get(flag) is not True:
+                    print(f"[guard] FAIL {flag}: hetero eval invariant "
+                          f"broken ({args.eval_fresh})")
+                    failed = True
+            for m in ("hetero_match_rate_respect",):
+                guard_ratio(ef, eb, m)
+            for m in ("hetero_gap_mean_respect", "hetero_gap_p95_respect"):
+                guard_gap_ceiling(m)
         # large-graph generalization tier: hard flags whenever the fresh
         # artifact carries the tier (always under --gen-only; otherwise a
         # baseline that pins gen keys requires the fresh run to have them)
-        has_gen = "gen_gap_mean_respect" in ef or args.gen_only \
-            or "gen_gap_mean_respect" in eb
+        has_gen = ("gen_gap_mean_respect" in ef or args.gen_only
+                   or "gen_gap_mean_respect" in eb) and not args.hetero_only
         if has_gen:
             for flag in ("gen_all_valid", "gen_respect_beats_list",
                          "gen_respect_beats_compiler"):

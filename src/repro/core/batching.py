@@ -384,6 +384,7 @@ class BucketedDecoder:
         self.decode_bf16 = decode_bf16
         self._fns = _LRU(max_compiled)
         self._warned_fallback = False
+        self._warned_hetero = False
 
     # ------------------------------------------------------------------ #
     def _logits_builder(self):
@@ -395,9 +396,25 @@ class BucketedDecoder:
         from ..kernels.ptr import ops as ptr_ops
         return lambda params, C: ptr_ops.make_logits_fn(params, C, impl=impl)
 
-    def _resolve_decode_impl(self, bucket_n: int, hidden: int) -> str:
-        """Pick the decode impl for one compiled shape (see class doc)."""
+    def _resolve_decode_impl(self, bucket_n: int, hidden: int,
+                             conditioned: bool = False) -> str:
+        """Pick the decode impl for one compiled shape (see class doc).
+
+        ``conditioned`` marks a profile-conditioned decode (heterogeneous /
+        capacity-constrained system): the whole-decode kernel has no system
+        input, so those programs always run the scan path.
+        """
         from ..kernels.ptr import ops as ptr_ops
+        if conditioned:
+            if (self.decode_impl in ("kernel", "kernel-interpret")
+                    and not self._warned_hetero):
+                self._warned_hetero = True
+                warnings.warn(
+                    "profile-conditioned decode (heterogeneous system) is "
+                    "not supported by the whole-decode kernel; using the "
+                    "scan path for these programs",
+                    RuntimeWarning, stacklevel=3)
+            return "scan"
         impl = self.decode_impl
         if impl is None:
             if (jax.default_backend() == "tpu"
@@ -466,13 +483,26 @@ class BucketedDecoder:
         fn = self._fns.get(key)
         if fn is None:
             mask_infeasible = self.mask_infeasible
+            # Static per-program system inputs.  Uniform systems yield
+            # sys_feat=None and caps=None, so the traced program — and the
+            # compiled executable a given (shape, system) key maps to — is
+            # unchanged from the pre-vector engine.
+            profile = system.profile_features()
+            sys_feat = jnp.asarray(profile) if profile.any() else None
+            caps = system.capacity_vector()
 
             def post_one(order, p, c, a, fl, pb, ob, nv):
                 assign, _ = segment.rho_dp_jax(
                     order, fl, pb, ob, p, n_stages, system, n_valid=nv)
-                return segment.repair_jax(p, c, a, assign, n_stages)
+                return segment.repair_jax(p, c, a, assign, n_stages,
+                                          param_bytes=pb, mem_capacity=caps)
 
             if impl in ("kernel", "kernel-interpret"):
+                if sys_feat is not None:
+                    raise ValueError(
+                        "whole-decode kernel cannot run a profile-"
+                        "conditioned system; resolve the impl with "
+                        "conditioned=True (scan)")
                 from ..kernels.ptr import decode as ptr_decode
                 interpret = impl == "kernel-interpret"
                 bf16 = self.decode_bf16
@@ -494,7 +524,7 @@ class BucketedDecoder:
                     def one(f, p, c, a, fl, pb, ob, nv):
                         order, _, _ = ptrnet.greedy_order(
                             params, f, p, mask_infeasible, nv, builder,
-                            unroll=DECODE_UNROLL)
+                            unroll=DECODE_UNROLL, sys_feat=sys_feat)
                         return order, post_one(order, p, c, a, fl, pb, ob,
                                                nv)
 
@@ -558,8 +588,10 @@ class BucketedDecoder:
         system = system.with_stages(n_stages)
         results: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(graphs)
         hidden = self._hidden_of(params)
+        conditioned = bool(system.profile_features().any())
         for _, idxs, batch in self._packed_buckets(graphs):
-            impl = self._resolve_decode_impl(batch.bucket_n, hidden)
+            impl = self._resolve_decode_impl(batch.bucket_n, hidden,
+                                             conditioned=conditioned)
             fn = self._fused_fn(batch.bucket_n, batch.batch,
                                 batch.child_width, n_stages, system, impl)
             orders, assigns = fn(params, batch)

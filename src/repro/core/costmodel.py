@@ -38,22 +38,135 @@ import numpy as np
 
 from .graph import CompGraph
 
-__all__ = ["PipelineSystem", "EDGETPU", "PodSystem", "evaluate_schedule", "ScheduleEval"]
+__all__ = [
+    "PipelineSystem",
+    "EDGETPU",
+    "PodSystem",
+    "evaluate_schedule",
+    "ScheduleEval",
+    "SYS_FEAT_DIM",
+    "CAPACITY_PENALTY_S",
+]
+
+#: Width of the fixed-size system profile fed to the policy decoder.  A
+#: uniform system encodes as the all-zero vector so policies trained before
+#: heterogeneous systems existed (no ``w_sys`` leaf) keep their behaviour.
+SYS_FEAT_DIM = 16
+
+#: Additive stage-time penalty for a segment whose parameter bytes exceed the
+#: stage's ``mem_capacity``.  Finite (not inf) so the DP recurrences still
+#: order infeasible completions deterministically and the backtrack stays
+#: well-defined when no feasible segmentation of a given order exists; any
+#: feasible schedule (seconds-scale costs) lexicographically beats any
+#: penalized one.  Representable in f32 for the device twins.
+CAPACITY_PENALTY_S = 1.0e30
+
+# Fields that may be per-stage vectors (tuples of length n_stages).
+_STAGE_FIELDS = ("compute_rate", "compute_eff", "link_bw", "cache_bytes", "mem_capacity")
 
 
 @dataclasses.dataclass(frozen=True)
 class PipelineSystem:
-    """Constants of a chained accelerator pipeline."""
+    """Constants of a chained accelerator pipeline.
+
+    ``compute_rate`` / ``compute_eff`` / ``link_bw`` / ``cache_bytes`` accept
+    either a scalar (every stage identical — the paper's setting) or a
+    per-stage sequence of length ``n_stages`` (heterogeneous pipeline).
+    Scalars are stored untouched so scalar systems hash/compare exactly as
+    before; sequences are normalized to ``tuple[float, ...]`` so the system
+    stays hashable (it keys fused-program and schedule LRU caches).
+
+    ``mem_capacity`` is an optional *hard* per-stage parameter-byte budget
+    (scalar or per-stage).  ``None`` (default) means unconstrained.  Unlike
+    ``cache_bytes`` — exceeding which merely costs re-stream bandwidth — a
+    stage over its ``mem_capacity`` is infeasible: solvers penalize such
+    segments by :data:`CAPACITY_PENALTY_S` and repair refuses to move mass
+    onto a stage past its budget.
+    """
 
     n_stages: int
-    compute_rate: float = 4.0e12        # ops/s (Edge TPU: 4 TOPS int8)
-    compute_eff: float = 0.25           # fraction of peak a conv actually gets
-    link_bw: float = 320.0e6            # bytes/s (USB 3.0 effective)
-    cache_bytes: float = 8.0 * 2**20    # on-chip parameter cache (8 MB SRAM)
-    fixed_overhead_s: float = 1.0e-4    # per-stage host dispatch overhead
+    compute_rate: float | tuple = 4.0e12        # ops/s (Edge TPU: 4 TOPS int8)
+    compute_eff: float | tuple = 0.25           # fraction of peak a conv actually gets
+    link_bw: float | tuple = 320.0e6            # bytes/s (USB 3.0 effective)
+    cache_bytes: float | tuple = 8.0 * 2**20    # on-chip parameter cache (8 MB SRAM)
+    fixed_overhead_s: float = 1.0e-4            # per-stage host dispatch overhead
+    mem_capacity: float | tuple | None = None   # hard per-stage param budget
+
+    def __post_init__(self) -> None:
+        for name in _STAGE_FIELDS:
+            v = getattr(self, name)
+            if v is None or isinstance(v, (int, float)):
+                continue
+            t = tuple(float(x) for x in v)
+            if len(t) != self.n_stages:
+                raise ValueError(
+                    f"{name} has {len(t)} entries for n_stages={self.n_stages}"
+                )
+            object.__setattr__(self, name, t)
 
     def with_stages(self, n_stages: int) -> "PipelineSystem":
         return dataclasses.replace(self, n_stages=n_stages)
+
+    @property
+    def has_stage_vectors(self) -> bool:
+        """True if any cost constant is per-stage (a tuple)."""
+        return any(
+            isinstance(getattr(self, name), tuple)
+            for name in ("compute_rate", "compute_eff", "link_bw", "cache_bytes")
+        )
+
+    @property
+    def has_capacity(self) -> bool:
+        return self.mem_capacity is not None
+
+    @property
+    def is_uniform(self) -> bool:
+        """True for the classic scalar system: every bit-identical fast path
+        (aliased DP cost tables, unconditioned policy) applies."""
+        return not self.has_stage_vectors and not self.has_capacity
+
+    def stage_vector(self, name: str) -> np.ndarray:
+        """The named constant broadcast to a ``(n_stages,)`` float64 array."""
+        v = getattr(self, name)
+        if isinstance(v, tuple):
+            return np.asarray(v, dtype=np.float64)
+        return np.full(self.n_stages, float(v), dtype=np.float64)
+
+    def capacity_vector(self) -> np.ndarray | None:
+        """``(n_stages,)`` float64 hard budget, or None if unconstrained."""
+        if self.mem_capacity is None:
+            return None
+        return self.stage_vector("mem_capacity")
+
+    def profile_features(self) -> np.ndarray:
+        """Fixed-width float32 embedding of the hardware profile.
+
+        All-zero iff :attr:`is_uniform` — the policy decoder adds
+        ``profile @ w_sys`` to its start token, so uniform systems reproduce
+        the unconditioned decode bit-for-bit (and releases shipped without a
+        ``w_sys`` leaf keep loading).  Per cost quantity the features are
+        ``[min, max, std]`` of the per-stage log2 deviation from the
+        geometric mean — scale-free, so "stage 0 is 2x faster" encodes the
+        same at Edge-TPU and pod magnitudes.
+        """
+        feats = np.zeros(SYS_FEAT_DIM, dtype=np.float32)
+        if self.is_uniform:
+            return feats
+        rate_eff = self.stage_vector("compute_rate") * self.stage_vector("compute_eff")
+        quantities = (rate_eff, self.stage_vector("link_bw"), self.stage_vector("cache_bytes"))
+        i = 0
+        for vec in quantities:
+            logs = np.log2(vec)
+            logs = logs - logs.mean()
+            feats[i : i + 3] = (logs.min(), logs.max(), logs.std())
+            i += 3
+        cap = self.capacity_vector()
+        if cap is not None:
+            ref = self.stage_vector("cache_bytes")
+            logs = np.log2(cap / ref) / 8.0     # /8: keep O(1) for MB..GB caps
+            feats[9] = 1.0                      # capacity-constrained flag
+            feats[10:13] = (logs.min(), logs.max(), logs.std())
+        return feats
 
 
 EDGETPU = PipelineSystem(n_stages=4)
@@ -81,10 +194,19 @@ class ScheduleEval:
     stage_in_bytes: np.ndarray
     on_cache_bytes: np.ndarray       # per stage, min(params, cache)
     off_cache_bytes: np.ndarray      # per stage, max(0, params - cache)
+    over_capacity_bytes: np.ndarray | None = None  # params beyond mem_capacity
 
     @property
     def objective(self) -> tuple[float, float]:
         return (self.bottleneck_s, self.latency_s)
+
+    @property
+    def capacity_ok(self) -> bool:
+        """True iff no stage exceeds its hard memory budget (vacuously true
+        for systems without one)."""
+        return self.over_capacity_bytes is None or not np.any(
+            self.over_capacity_bytes > 0.0
+        )
 
 
 def evaluate_schedule(
@@ -113,18 +235,27 @@ def evaluate_schedule(
         if hi > lo:
             stage_in_bytes[lo:hi] += graph.out_bytes[u]
 
-    off_cache = np.maximum(0.0, stage_params - system.cache_bytes)
+    # Per-stage constants broadcast to (k,).  For scalar systems every entry
+    # is the same IEEE double, so the elementwise arithmetic below is
+    # bit-identical to the scalar expressions it replaced.
+    link_bw = system.stage_vector("link_bw")
+    rate_eff = system.stage_vector("compute_rate") * system.stage_vector("compute_eff")
+    cache = system.stage_vector("cache_bytes")
+
+    off_cache = np.maximum(0.0, stage_params - cache)
     on_cache = stage_params - off_cache
     occupied = np.zeros(k)
     np.add.at(occupied, assign, 1.0)
     # Empty stages still forward tensors through the chain (in_bytes term) but
     # pay no compute / overhead — identical to the DP's empty-segment cost.
     stage_times = (
-        stage_in_bytes / system.link_bw
-        + stage_flops / (system.compute_rate * system.compute_eff)
-        + off_cache / system.link_bw
+        stage_in_bytes / link_bw
+        + stage_flops / rate_eff
+        + off_cache / link_bw
         + np.where(occupied > 0, system.fixed_overhead_s, 0.0)
     )
+    cap = system.capacity_vector()
+    over_capacity = None if cap is None else np.maximum(0.0, stage_params - cap)
     return ScheduleEval(
         stage_times=stage_times,
         bottleneck_s=float(stage_times.max(initial=0.0)),
@@ -134,4 +265,5 @@ def evaluate_schedule(
         stage_in_bytes=stage_in_bytes,
         on_cache_bytes=on_cache,
         off_cache_bytes=off_cache,
+        over_capacity_bytes=over_capacity,
     )

@@ -25,15 +25,17 @@ import time
 
 import numpy as np
 
-from .costmodel import PipelineSystem, evaluate_schedule
+from .costmodel import CAPACITY_PENALTY_S, PipelineSystem, evaluate_schedule
 from .graph import CompGraph
 
 __all__ = [
     "segment_cost_table",
+    "segment_cost_tables",
     "boundary_bytes",
     "exact_dp",
     "exact_bb",
     "brute_force_monotone",
+    "brute_force_contiguous",
     "order_from_assignment",
 ]
 
@@ -63,12 +65,19 @@ def boundary_bytes(graph: CompGraph, order: np.ndarray) -> np.ndarray:
     return np.where(crossing, graph.out_bytes[None, :], 0.0).sum(axis=1)
 
 
-def segment_cost_table(
+def segment_cost_tables(
     graph: CompGraph, order: np.ndarray, system: PipelineSystem
-) -> np.ndarray:
-    """(n+1, n+1) matrix C[i, j] = stage time of segment holding order
-    positions [i, j).  C[i, i] is the pure forwarding cost of an empty stage.
-    Entries with j < i are +inf."""
+) -> list[np.ndarray]:
+    """Per-stage segment cost tables: ``tables[s][i, j]`` = time of stage
+    ``s`` holding order positions [i, j).  ``tables[s][i, i]`` is the pure
+    forwarding cost of an empty stage; entries with j < i are +inf.
+
+    When every stage shares the same constants, all ``n_stages`` entries
+    alias ONE table built with exactly the scalar arithmetic this function
+    replaced — so the uniform DP runs the identical op sequence and stays
+    bitwise back-compatible.  A stage's ``mem_capacity`` (if set) adds
+    :data:`CAPACITY_PENALTY_S` to every over-budget segment.
+    """
     n = graph.n
     flops = np.concatenate([[0.0], np.cumsum(graph.flops[order])])
     params = np.concatenate([[0.0], np.cumsum(graph.param_bytes[order])])
@@ -76,16 +85,47 @@ def segment_cost_table(
 
     seg_flops = flops[None, :] - flops[:, None]              # [i, j]
     seg_params = params[None, :] - params[:, None]
-    off_cache = np.maximum(0.0, seg_params - system.cache_bytes)
     occupied = (np.arange(n + 1)[None, :] - np.arange(n + 1)[:, None]) > 0
-    cost = (
-        bbytes[:, None] / system.link_bw
-        + seg_flops / (system.compute_rate * system.compute_eff)
-        + off_cache / system.link_bw
-        + np.where(occupied, system.fixed_overhead_s, 0.0)
+
+    rate_eff = system.stage_vector("compute_rate") * system.stage_vector("compute_eff")
+    bw = system.stage_vector("link_bw")
+    cache = system.stage_vector("cache_bytes")
+    cap = system.capacity_vector()
+
+    def one(re_s: float, bw_s: float, cache_s: float, cap_s: float | None) -> np.ndarray:
+        off_cache = np.maximum(0.0, seg_params - cache_s)
+        cost = (
+            bbytes[:, None] / bw_s
+            + seg_flops / re_s
+            + off_cache / bw_s
+            + np.where(occupied, system.fixed_overhead_s, 0.0)
+        )
+        if cap_s is not None:
+            cost = cost + np.where(seg_params > cap_s, CAPACITY_PENALTY_S, 0.0)
+        cost[seg_flops < 0] = np.inf
+        return cost
+
+    k = system.n_stages
+    same_cost = bool(
+        np.all(rate_eff == rate_eff[0]) and np.all(bw == bw[0]) and np.all(cache == cache[0])
     )
-    cost[seg_flops < 0] = np.inf
-    return cost
+    if same_cost and cap is None:
+        return [one(rate_eff[0], bw[0], cache[0], None)] * k
+    if same_cost and bool(np.all(cap == cap[0])):
+        return [one(rate_eff[0], bw[0], cache[0], cap[0])] * k
+    return [
+        one(rate_eff[s], bw[s], cache[s], None if cap is None else cap[s])
+        for s in range(k)
+    ]
+
+
+def segment_cost_table(
+    graph: CompGraph, order: np.ndarray, system: PipelineSystem, stage: int = 0
+) -> np.ndarray:
+    """The cost table of one stage (see :func:`segment_cost_tables`); kept
+    for callers that predate heterogeneous systems, where every stage's
+    table is the same array."""
+    return segment_cost_tables(graph, order, system)[stage]
 
 
 def exact_dp(
@@ -99,13 +139,19 @@ def exact_dp(
     Returns ``(assignment, bottleneck_seconds)``; assignment is per *node*
     (not per position).  ``order`` defaults to the node index order, which is
     topological by CompGraph construction (ASAP-compatible).
+
+    Heterogeneous systems make the recurrence stage-indexed — stage ``s``
+    reads its own cost table ``C_s`` — and a ``mem_capacity`` budget shows up
+    as :data:`CAPACITY_PENALTY_S` inside the tables, so a returned bottleneck
+    ``>= CAPACITY_PENALTY_S`` means no capacity-feasible segmentation of this
+    order exists (the returned split is then the least-violating one).
     """
     if system is None:
         system = PipelineSystem(n_stages=n_stages)
     system = system.with_stages(n_stages)
     n = graph.n
     order = np.arange(n) if order is None else np.asarray(order)
-    C = segment_cost_table(graph, order, system)
+    tables = segment_cost_tables(graph, order, system)
 
     k = n_stages
     # f_b[j], f_l[j]: best (bottleneck, latency) covering positions [0, j)
@@ -113,12 +159,13 @@ def exact_dp(
     # per-j lex-argmin is vectorized over the whole (i, j) plane; C[i, j]
     # is +inf for i > j, which excludes those split points exactly like
     # the old per-column [: j + 1] slicing did.
-    f_b = C[0].copy()
-    f_l = C[0].copy()
+    f_b = tables[0][0].copy()
+    f_l = tables[0][0].copy()
     args = np.zeros((k, n + 1), dtype=np.int64)
     cols = np.arange(n + 1)
     with np.errstate(invalid="ignore"):
         for s in range(1, k):
+            C = tables[s]
             b = np.maximum(f_b[:, None], C)              # (i, j)
             l = f_l[:, None] + C
             m = b.min(axis=0)
@@ -175,10 +222,19 @@ def exact_bb(
     inc_assign, _ = exact_dp(graph, k, system)
     inc_eval = evaluate_schedule(graph, inc_assign, system)
     best = [inc_eval.bottleneck_s, inc_eval.latency_s, inc_assign.copy()]
+    if not inc_eval.capacity_ok:
+        # never let an infeasible incumbent prune feasible completions; if
+        # nothing feasible exists either, the DP's least-violating split is
+        # still returned.
+        best[0] = np.inf
+        best[1] = np.inf
 
-    rate = system.compute_rate * system.compute_eff
-    bw = system.link_bw
-    cache = system.cache_bytes
+    # (k,) per-stage constants; for scalar systems every entry is the same
+    # double, so stage_time() computes the exact pre-vector arithmetic.
+    rate = system.stage_vector("compute_rate") * system.stage_vector("compute_eff")
+    bw = system.stage_vector("link_bw")
+    cache = system.stage_vector("cache_bytes")
+    cap = system.capacity_vector()
     ovh = system.fixed_overhead_s
 
     stage_flops = np.zeros(k)
@@ -194,11 +250,11 @@ def exact_bb(
     deadline = time.monotonic() + time_budget_s
 
     def stage_time(s: int) -> float:
-        off = stage_params[s] - cache
+        off = stage_params[s] - cache[s]
         return (
-            boundary[s] / bw
-            + stage_flops[s] / rate
-            + (off / bw if off > 0 else 0.0)
+            boundary[s] / bw[s]
+            + stage_flops[s] / rate[s]
+            + (off / bw[s] if off > 0 else 0.0)
             + (ovh if occupied[s] else 0.0)
         )
 
@@ -216,6 +272,8 @@ def exact_bb(
         for u in parents[v]:
             lo = max(lo, assign[u])
         for s in range(lo, k):
+            if cap is not None and stage_params[s] + params_arr[v] > cap[s]:
+                continue    # hard memory budget: stage s cannot take v
             # apply node v -> stage s
             stage_flops[s] += flops_arr[v]
             stage_params[s] += params_arr[v]
@@ -266,6 +324,8 @@ def brute_force_monotone(
         nonlocal best
         if v == n:
             ev = evaluate_schedule(graph, assign, system)
+            if not ev.capacity_ok:
+                return
             key = (ev.bottleneck_s, ev.latency_s)
             if key < best[:2]:
                 best = (key[0], key[1], assign.copy())
@@ -278,3 +338,46 @@ def brute_force_monotone(
 
     rec(0)
     return best[2], float(best[0])
+
+
+def brute_force_contiguous(
+    graph: CompGraph,
+    n_stages: int,
+    system: PipelineSystem | None = None,
+    order: np.ndarray | None = None,
+) -> tuple[np.ndarray, float, float]:
+    """Exhaustive lexicographic minimum over ALL contiguous segmentations of
+    ``order`` — the C(n+k-1, k-1) test oracle for :func:`exact_dp` (use for
+    |V| <= ~10).  Scores segmentations on the same per-stage cost tables the
+    DP reads (capacity penalty included), so a mismatch isolates the DP
+    recurrence/backtrack rather than cost-model arithmetic.
+
+    Returns ``(assignment, bottleneck_seconds, latency_seconds)``.
+    """
+    import itertools
+
+    if system is None:
+        system = PipelineSystem(n_stages=n_stages)
+    system = system.with_stages(n_stages)
+    n = graph.n
+    k = n_stages
+    order = np.arange(n) if order is None else np.asarray(order)
+    tables = segment_cost_tables(graph, order, system)
+
+    best_key = (np.inf, np.inf)
+    best_bounds: tuple[int, ...] | None = None
+    for cuts in itertools.combinations_with_replacement(range(n + 1), k - 1):
+        bounds = (0, *cuts, n)
+        costs = [float(tables[s][bounds[s], bounds[s + 1]]) for s in range(k)]
+        key = (max(costs), sum(costs))
+        if key < best_key:
+            best_key = key
+            best_bounds = bounds
+
+    assert best_bounds is not None
+    assign_pos = np.empty(n, dtype=np.int64)
+    for s in range(k):
+        assign_pos[best_bounds[s] : best_bounds[s + 1]] = s
+    assign = np.empty(n, dtype=np.int64)
+    assign[order] = assign_pos
+    return assign, float(best_key[0]), float(best_key[1])

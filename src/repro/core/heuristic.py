@@ -40,17 +40,17 @@ def compiler_partition(
     assign_pos = np.zeros(n, dtype=np.int64)
     acc = 0.0
     stage = 0
-    remaining = n
     for p in range(n):
         node = order[p]
-        # never strand later stages without nodes
+        # never strand later stages without nodes; the p > 0 guard keeps
+        # stage 0 non-empty, so graphs with n < n_stages simply leave the
+        # trailing stages empty (still a valid assignment).
         must_cut = (n - p) <= (n_stages - 1 - stage)
         if stage < n_stages - 1 and (acc >= target or must_cut) and p > 0:
             stage += 1
             acc = 0.0
         assign_pos[p] = stage
         acc += float(graph.param_bytes[node])
-        remaining -= 1
     assign = np.empty(n, dtype=np.int64)
     assign[order] = assign_pos
     return assign

@@ -23,6 +23,14 @@ constraint, the co-consumer rule is best-effort (matching the paper's
 (:func:`~repro.core.segment.repair_jax`) the fused serving path deploys;
 it is bit-identical to this reference (all-integer arithmetic,
 property-tested), which stays the oracle.
+
+The co-consumer rule is also where a hard per-stage ``mem_capacity``
+(:class:`repro.core.costmodel.PipelineSystem`) is enforced during repair: a
+child is never pulled onto a stage whose parameter load would exceed its
+budget (the move is skipped; dependency monotonicity still always holds).
+On a capacity-feasible monotone input — which the capacity-penalized DP
+produces — every co-consumer move lowers a stage and is capacity-guarded,
+so repair preserves feasibility end to end.
 """
 
 from __future__ import annotations
@@ -44,10 +52,24 @@ def dependency_repair(graph: CompGraph, assign: np.ndarray, n_stages: int) -> np
     return out
 
 
-def co_consumer_repair(graph: CompGraph, assign: np.ndarray) -> np.ndarray:
+def co_consumer_repair(
+    graph: CompGraph, assign: np.ndarray, mem_capacity: np.ndarray | None = None
+) -> np.ndarray:
     """Pull all children of each multi-consumer node to the earliest child
-    stage that still dominates each child's parents."""
+    stage that still dominates each child's parents.
+
+    ``mem_capacity`` (per-stage byte budget, optional) makes the rule
+    capacity-aware: a move that would push the target stage's parameter
+    load past its budget is skipped, leaving the child where it is.  Loads
+    are recomputed from the incoming assignment and tracked incrementally
+    across moves (the device twin mirrors this exact update order).
+    """
     out = np.asarray(assign, dtype=np.int64).copy()
+    caps = None
+    if mem_capacity is not None:
+        caps = np.asarray(mem_capacity, dtype=np.float64)
+        loads = np.zeros(len(caps))
+        np.add.at(loads, out, graph.param_bytes)
     for u in range(graph.n):
         ch = graph.children[u]
         if len(ch) < 2:
@@ -55,7 +77,14 @@ def co_consumer_repair(graph: CompGraph, assign: np.ndarray) -> np.ndarray:
         earliest = min(out[v] for v in ch)
         for v in ch:
             lo = max((out[p] for p in graph.parents[v]), default=0)
-            out[v] = max(earliest, lo)
+            tgt = max(earliest, lo)
+            if caps is not None and tgt != out[v]:
+                pb = graph.param_bytes[v]
+                if loads[tgt] + pb > caps[tgt]:
+                    continue        # over budget: leave v on its stage
+                loads[tgt] += pb
+                loads[out[v]] -= pb
+            out[v] = tgt
     return out
 
 
@@ -65,12 +94,15 @@ def repair(
     n_stages: int,
     max_iters: int = 8,
     enforce_co_consumer: bool = True,
+    mem_capacity: np.ndarray | None = None,
 ) -> np.ndarray:
     """Deterministic deployment repair; output always satisfies monotonicity."""
     out = dependency_repair(graph, assign, n_stages)
     if enforce_co_consumer:
         for _ in range(max_iters):
-            nxt = dependency_repair(graph, co_consumer_repair(graph, out), n_stages)
+            nxt = dependency_repair(
+                graph, co_consumer_repair(graph, out, mem_capacity), n_stages
+            )
             if np.array_equal(nxt, out):
                 break
             out = nxt

@@ -35,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .costmodel import SYS_FEAT_DIM
+
 __all__ = [
     "init_params",
     "encode",
@@ -53,8 +55,18 @@ def _glorot(key, shape):
     return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
 
 
-def init_params(key, feat_dim: int, hidden: int = 256) -> dict:
-    """Parameter pytree for the LSTM-PtrNet (paper: 256-cell LSTMs)."""
+def init_params(key, feat_dim: int, hidden: int = 256,
+                sys_feat_dim: int = SYS_FEAT_DIM) -> dict:
+    """Parameter pytree for the LSTM-PtrNet (paper: 256-cell LSTMs).
+
+    ``w_sys`` projects the hardware-profile vector
+    (:meth:`repro.core.costmodel.PipelineSystem.profile_features`) onto the
+    decoder start token — drawn from ``ks[10]``, which earlier revisions
+    split off but never consumed, so every pre-existing leaf is
+    bit-identical to what the same key produced before the leaf existed.
+    Checkpoints saved without ``w_sys`` still load: conditioning is skipped
+    when the leaf (or the profile) is absent.
+    """
     ks = jax.random.split(key, 12)
     def lstm(k):
         k1, k2 = jax.random.split(k)
@@ -79,6 +91,7 @@ def init_params(key, feat_dim: int, hidden: int = 256) -> dict:
             "v": _glorot(ks[8], (hidden, 1))[:, 0],
         },
         "dec0": jax.random.normal(ks[9], (hidden,)) * 0.1,
+        "w_sys": _glorot(ks[10], (sys_feat_dim, hidden)),
     }
 
 
@@ -171,6 +184,7 @@ def decode(
     logits_fn=None,
     n_valid=None,
     unroll: int = 1,
+    sys_feat=None,
 ):
     """Run the full pointing decode (Alg. 1).
 
@@ -181,6 +195,12 @@ def decode(
       sample_key: PRNG key -> stochastic decode; None -> greedy (argmax).
       mask_infeasible: additionally mask nodes with unscheduled parents.
       logits_fn: override for the glimpse+pointer op (e.g. Pallas kernel).
+      sys_feat: optional hardware-profile vector; when given (and the
+        params carry a ``w_sys`` leaf) its projection is added to the
+        decoder start token ``dec0``.  None — or a release without
+        ``w_sys`` — leaves the decode bit-identical to the unconditioned
+        program (uniform systems pass None, not the zero vector, so no
+        extra ops enter the trace).
       n_valid: number of real (non-padded) nodes; the first ``n_valid``
         steps only point at real nodes, the remaining steps consume the
         padded slots with zero log-prob/entropy, so ``order[:n_valid]`` is
@@ -249,13 +269,17 @@ def decode(
         visited = visited.at[idx].set(True)
         return (state, emb[idx], visited), (idx, lp, ent)
 
-    init = (enc_state, params["dec0"], jnp.zeros(n, bool))
+    d0 = params["dec0"]
+    if sys_feat is not None and "w_sys" in params:
+        d0 = d0 + sys_feat @ params["w_sys"]
+    init = (enc_state, d0, jnp.zeros(n, bool))
     _, (order, logp, ent) = jax.lax.scan(step, init, keys, unroll=unroll)
     return order.astype(jnp.int32), logp, ent
 
 
 def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid,
-         logits_builder=None, decode_builder=None, unroll: int = 1):
+         logits_builder=None, decode_builder=None, unroll: int = 1,
+         sys_feat=None):
     C, enc_state, emb = encode(params, feats, n_valid=n_valid,
                                unroll=unroll)
     if decode_builder is not None:
@@ -263,6 +287,10 @@ def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid,
         # per-step scan (e.g. the persistent Pallas kernel,
         # repro.kernels.ptr.decode.make_decode_fn) — it owns masking,
         # argmax/sampling and the drain semantics end to end.
+        if sys_feat is not None:
+            raise ValueError(
+                "decode_builder kernels do not take a system profile; "
+                "select the scan decode for heterogeneous systems")
         decode_fn = decode_builder(params)
         return decode_fn(
             params, C, emb, enc_state, parent_mat,
@@ -273,25 +301,27 @@ def _run(params, feats, parent_mat, sample_key, mask_infeasible, n_valid,
         params, C, emb, enc_state, parent_mat,
         sample_key=sample_key, mask_infeasible=mask_infeasible,
         logits_fn=logits_fn, n_valid=n_valid, unroll=unroll,
+        sys_feat=sys_feat,
     )
 
 
 def greedy_order(params, feats, parent_mat, mask_infeasible=True,
                  n_valid=None, logits_builder=None, decode_builder=None,
-                 unroll: int = 1):
+                 unroll: int = 1, sys_feat=None):
     """``logits_builder(params, C) -> logits_fn`` overrides the pointer/
     glimpse op after encoding (e.g. the Pallas kernel via
     :func:`repro.kernels.ptr.ops.make_logits_fn`); None keeps the hoisted
     pure-jnp path.  ``decode_builder(params) -> decode_fn`` replaces the
     WHOLE decode loop instead (the persistent kernel,
     :func:`repro.kernels.ptr.decode.make_decode_fn`); it wins over
-    ``logits_builder`` when both are given."""
+    ``logits_builder`` when both are given.  ``sys_feat`` conditions the
+    decode on a hardware profile (see :func:`decode`)."""
     return _run(params, feats, parent_mat, None, mask_infeasible, n_valid,
-                logits_builder, decode_builder, unroll)
+                logits_builder, decode_builder, unroll, sys_feat=sys_feat)
 
 
 def sample_order(params, feats, parent_mat, key, mask_infeasible=True,
                  n_valid=None, logits_builder=None, decode_builder=None,
-                 unroll: int = 1):
+                 unroll: int = 1, sys_feat=None):
     return _run(params, feats, parent_mat, key, mask_infeasible, n_valid,
-                logits_builder, decode_builder, unroll)
+                logits_builder, decode_builder, unroll, sys_feat=sys_feat)

@@ -98,6 +98,10 @@ def _label_cache_key(g: CompGraph, n_stages: int, system: PipelineSystem,
     h.update(repr((n_stages, method, max_deg, budget, system.compute_rate,
                    system.compute_eff, system.link_bw, system.cache_bytes,
                    system.fixed_overhead_s)).encode())
+    if system.mem_capacity is not None:
+        # appended ONLY when set, so scalar systems keep their pre-capacity
+        # on-disk label-cache keys
+        h.update(repr(system.mem_capacity).encode())
     return h.hexdigest()[:40]
 
 
@@ -242,15 +246,22 @@ def _policy_rewards(params, batch: PaddedGraphBatch, keys, n_stages, system,
     """
 
     dense = batch.dense   # static: skip n_valid masking for equal-size packs
+    # profile conditioning: uniform systems pass None (no extra ops — the
+    # traced program is unchanged), heterogeneous systems add the projected
+    # profile to the decoder start token so training sees the hardware.
+    profile = system.profile_features()
+    sys_feat = jnp.asarray(profile) if profile.any() else None
 
     def one(feats, pmat, fl, pb, ob, label, nv, k):
         nv_d = None if dense else nv
         if sample:
             order, logp, ent = ptrnet.sample_order(
-                params, feats, pmat, k, mask_infeasible, n_valid=nv_d)
+                params, feats, pmat, k, mask_infeasible, n_valid=nv_d,
+                sys_feat=sys_feat)
         else:
             order, logp, ent = ptrnet.greedy_order(
-                params, feats, pmat, mask_infeasible, n_valid=nv_d)
+                params, feats, pmat, mask_infeasible, n_valid=nv_d,
+                sys_feat=sys_feat)
         assign, _ = rho_dp_jax(order, fl, pb, ob, pmat, n_stages, system,
                                n_valid=nv_d)
         if not dense:
@@ -286,6 +297,10 @@ def make_rollout_fn(n_stages: int, system: PipelineSystem,
     system = system.with_stages(n_stages)
 
     if decode_impl in ("kernel", "kernel-interpret"):
+        if system.profile_features().any():
+            raise ValueError(
+                "whole-decode kernel rollouts cannot condition on a "
+                "heterogeneous system profile; use the scan decode_impl")
         from ..kernels.ptr import decode as ptr_decode
         interpret = decode_impl == "kernel-interpret"
 

@@ -30,8 +30,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .costmodel import PipelineSystem
+from .costmodel import CAPACITY_PENALTY_S, PipelineSystem
 
 __all__ = [
     "rho_dp_jax",
@@ -156,19 +157,46 @@ def rho_dp_jax(
     i_idx = jnp.arange(n + 1)
     seg_flops = cf[None, :] - cf[:, None]
     seg_params = cp[None, :] - cp[:, None]
-    off = jnp.maximum(0.0, seg_params - system.cache_bytes)
     # a segment is "occupied" (pays the dispatch overhead) iff it holds at
     # least one REAL node — trailing padded slots must not re-introduce the
     # overhead an empty host-side segment never pays.
     cnt = jnp.minimum(i_idx, nv)
     occ = (cnt[None, :] - cnt[:, None]) > 0
-    cost = (
-        bbytes[:, None] / system.link_bw
-        + seg_flops / (system.compute_rate * system.compute_eff)
-        + off / system.link_bw
-        + jnp.where(occ, system.fixed_overhead_s, 0.0)
+
+    # Static (trace-time) per-stage constants, as weak-typed python floats so
+    # the uniform path emits the exact pre-vector op sequence.  Uniform
+    # systems alias ONE cost table across all k stages — the traced program
+    # (and therefore every cached fused executable) is unchanged; per-stage
+    # constants stack k tables and the recurrence below indexes its stage's.
+    re_np = system.stage_vector("compute_rate") * system.stage_vector("compute_eff")
+    bw_np = system.stage_vector("link_bw")
+    cache_np = system.stage_vector("cache_bytes")
+    cap_np = system.capacity_vector()
+    same_cost = bool(
+        np.all(re_np == re_np[0]) and np.all(bw_np == bw_np[0]) and np.all(cache_np == cache_np[0])
     )
-    cost = jnp.where(i_idx[:, None] <= i_idx[None, :], cost, jnp.inf)
+    same_cap = cap_np is None or bool(np.all(cap_np == cap_np[0]))
+
+    def one_table(s: int) -> jnp.ndarray:
+        off = jnp.maximum(0.0, seg_params - float(cache_np[s]))
+        c = (
+            bbytes[:, None] / float(bw_np[s])
+            + seg_flops / float(re_np[s])
+            + off / float(bw_np[s])
+            + jnp.where(occ, system.fixed_overhead_s, 0.0)
+        )
+        if cap_np is not None:
+            # hard memory budget: over-budget segments cost CAPACITY_PENALTY_S
+            # extra (finite, so the lex recurrence still orders infeasible
+            # completions) — mirrors exact.segment_cost_tables
+            c = c + jnp.where(seg_params > float(cap_np[s]), CAPACITY_PENALTY_S, 0.0)
+        return jnp.where(i_idx[:, None] <= i_idx[None, :], c, jnp.inf)
+
+    if same_cost and same_cap:
+        tables = [one_table(0)] * k
+    else:
+        tables = [one_table(s) for s in range(k)]
+    cost = tables[0]
 
     # f_b[j], f_l[j]: best (bottleneck, latency) covering positions [0, j);
     # args[s][j]: the lex-argmin split point, exactly as in exact_dp.
@@ -180,7 +208,8 @@ def rho_dp_jax(
     f_b = cost[0]
     f_l = cost[0]
     splits = []
-    for _ in range(1, k):
+    for s in range(1, k):
+        cost = tables[s]
         b = jnp.maximum(f_b[:, None], cost)                  # (i, j)
         l = f_l[:, None] + cost
         m = b.min(axis=0)
@@ -218,7 +247,8 @@ def dependency_repair_jax(anc_mat, assign, n_stages: int):
     return jnp.max(jnp.where(anc_mat, out[None, :], 0), axis=1)
 
 
-def co_consumer_repair_jax(parent_mat, child_mat, assign):
+def co_consumer_repair_jax(parent_mat, child_mat, assign,
+                           param_bytes=None, mem_capacity=None):
     """Jittable twin of :func:`repro.core.postprocess.co_consumer_repair`.
 
     ``child_mat`` is :meth:`CompGraph.child_matrix` — children in ascending
@@ -227,40 +257,79 @@ def co_consumer_repair_jax(parent_mat, child_mat, assign):
     child's dependency floor may read a co-child updated earlier in the
     same row).  The outer pass over producers stays a scan: the host's
     in-place updates are visible to later rows.
+
+    ``mem_capacity`` (static per-stage byte budget, with ``param_bytes``)
+    selects the capacity-aware variant: a pull whose target stage would
+    exceed its budget is skipped, with stage loads recomputed from the
+    incoming assignment and updated move-by-move in the host's order.
+    When it is None the original integer-only program is traced unchanged.
     """
     n = parent_mat.shape[0]
     big = jnp.int32(1 << 30)
 
-    def node_step(out, u):
+    if mem_capacity is None:
+        def node_step(out, u):
+            ch = child_mat[u]
+            valid = ch >= 0
+            multi = jnp.sum(valid.astype(jnp.int32)) >= 2
+            # earliest child stage, frozen BEFORE this row's updates (host
+            # computes it once, before its inner loop)
+            earliest = jnp.min(jnp.where(valid, out[ch.clip(0)], big))
+            for c in range(child_mat.shape[1]):      # static width: unrolled
+                v = ch[c]
+                vc = v.clip(0)
+                pv = parent_mat[vc]
+                lo = jnp.max(jnp.where(pv >= 0, out[pv.clip(0)], 0))
+                new = jnp.maximum(earliest, lo)
+                out = out.at[vc].set(
+                    jnp.where(multi & (v >= 0), new, out[vc]))
+            return out, None
+
+        out, _ = jax.lax.scan(node_step, assign.astype(jnp.int32), jnp.arange(n))
+        return out
+
+    caps = jnp.asarray(np.asarray(mem_capacity), param_bytes.dtype)
+    out0 = assign.astype(jnp.int32)
+    loads0 = jnp.zeros(caps.shape[0], param_bytes.dtype).at[out0].add(param_bytes)
+
+    def node_step_cap(carry, u):
+        out, loads = carry
         ch = child_mat[u]
         valid = ch >= 0
         multi = jnp.sum(valid.astype(jnp.int32)) >= 2
-        # earliest child stage, frozen BEFORE this row's updates (host
-        # computes it once, before its inner loop)
         earliest = jnp.min(jnp.where(valid, out[ch.clip(0)], big))
-        for c in range(child_mat.shape[1]):      # static width: unrolled
+        for c in range(child_mat.shape[1]):          # static width: unrolled
             v = ch[c]
             vc = v.clip(0)
             pv = parent_mat[vc]
             lo = jnp.max(jnp.where(pv >= 0, out[pv.clip(0)], 0))
             new = jnp.maximum(earliest, lo)
-            out = out.at[vc].set(
-                jnp.where(multi & (v >= 0), new, out[vc]))
-        return out, None
+            old = out[vc]
+            pb = param_bytes[vc]
+            fits = loads[new] + pb <= caps[new]
+            apply = multi & (v >= 0) & ((new == old) | fits)
+            moved = apply & (new != old)
+            delta = jnp.where(moved, pb, jnp.zeros((), param_bytes.dtype))
+            loads = loads.at[old].add(-delta).at[new].add(delta)
+            out = out.at[vc].set(jnp.where(apply, new, old))
+        return (out, loads), None
 
-    out, _ = jax.lax.scan(node_step, assign.astype(jnp.int32), jnp.arange(n))
+    (out, _), _ = jax.lax.scan(node_step_cap, (out0, loads0), jnp.arange(n))
     return out
 
 
 def repair_jax(parent_mat, child_mat, anc_mat, assign, n_stages: int,
-               max_iters: int = 8, enforce_co_consumer: bool = True):
+               max_iters: int = 8, enforce_co_consumer: bool = True,
+               param_bytes=None, mem_capacity=None):
     """Jittable twin of :func:`repro.core.postprocess.repair`.
 
     Alternates the two rules to a fixed point exactly like the host: a
     ``while_loop`` stops as soon as an iteration is a no-op (the host's
     break), bounded by ``max_iters``.  Re-applying a deterministic pass at
     its fixed point is the identity, so under ``vmap`` the masked extra
-    iterations on already-converged lanes change nothing.
+    iterations on already-converged lanes change nothing.  A static
+    ``mem_capacity`` (with ``param_bytes``) threads the capacity guard into
+    every co-consumer pass; None traces the original program unchanged.
     """
     out = dependency_repair_jax(anc_mat, assign, n_stages)
     if enforce_co_consumer:
@@ -271,7 +340,10 @@ def repair_jax(parent_mat, child_mat, anc_mat, assign, n_stages: int,
         def body(state):
             i, out, _ = state
             nxt = dependency_repair_jax(
-                anc_mat, co_consumer_repair_jax(parent_mat, child_mat, out),
+                anc_mat,
+                co_consumer_repair_jax(parent_mat, child_mat, out,
+                                       param_bytes=param_bytes,
+                                       mem_capacity=mem_capacity),
                 n_stages)
             return i + 1, nxt, jnp.all(nxt == out)
 

@@ -22,17 +22,22 @@ from .generalization import (  # noqa: F401
 )
 from .oracle import ExactOracle, OracleSolution  # noqa: F401
 from .report import (  # noqa: F401
+    check_hetero,
     check_results,
     emit_lines,
     summarize,
     summarize_generalization,
+    summarize_hetero,
     write_report,
 )
 from .runner import MATCH_RTOL, POLICY_NAMES, run_grid, run_scenario  # noqa: F401
 from .scenarios import (  # noqa: F401
+    HETERO_FAMILIES,
     INGEST_ARCHS,
     SYNTH_FAMILIES,
     Scenario,
+    hetero_grid,
+    hetero_system,
     ingest_scenarios,
     layered_dag,
     scenario_grid,

@@ -15,7 +15,14 @@ from pathlib import Path
 
 from .runner import POLICY_NAMES
 
-__all__ = ["summarize", "write_report", "emit_lines", "check_results"]
+__all__ = [
+    "summarize",
+    "summarize_hetero",
+    "write_report",
+    "emit_lines",
+    "check_results",
+    "check_hetero",
+]
 
 
 def _strip_private(results: dict) -> dict:
@@ -89,6 +96,33 @@ def summarize_generalization(gen: dict) -> dict:
     return out
 
 
+def summarize_hetero(results: dict) -> dict:
+    """Flat ``hetero_*`` guard keys + the full heterogeneous-tier record,
+    for merging into the eval artifact (or standing alone as the
+    ``--hetero-only`` artifact).  The tier runs as its own
+    :func:`~repro.eval.runner.run_grid` over
+    :func:`~repro.eval.scenarios.hetero_grid`, so none of the uniform
+    grid's pinned keys move."""
+    out: dict = {}
+    out["hetero_oracle_parity"] = results["oracle_parity"]
+    out["hetero_all_valid"] = results["all_schedules_valid"]
+    # vacuously true when no memcap scenario ran (hard flag either way)
+    out["all_capacity_feasible"] = results.get("all_capacity_feasible", True)
+    for name in POLICY_NAMES:
+        agg = results["aggregate"][name]
+        out[f"hetero_match_rate_{name}"] = agg["match_rate"]
+        out[f"hetero_gap_mean_{name}"] = agg["gap_mean"]
+        out[f"hetero_gap_p95_{name}"] = agg["gap_p95"]
+    stripped = _strip_private(results)
+    out["hetero"] = {
+        "aggregate": stripped["aggregate"],
+        "scenarios": stripped["scenarios"],
+        "oracle_parity": stripped["oracle_parity"],
+        "all_schedules_valid": stripped["all_schedules_valid"],
+    }
+    return out
+
+
 def write_report(results: dict, path: str | Path,
                  meta: dict | None = None,
                  generalization: dict | None = None) -> dict:
@@ -143,4 +177,17 @@ def check_results(results: dict) -> list[str]:
                 f"below_refined_optimum_{name}="
                 f"{agg['below_refined_optimum']}: a schedule scored below "
                 "the bb-refined true monotone optimum (oracle bug)")
+    return problems
+
+
+def check_hetero(results: dict) -> list[str]:
+    """Hard invariants of the heterogeneous tier: everything
+    :func:`check_results` enforces, plus capacity feasibility — neither
+    the exact reference nor the production policy may ever emit a
+    schedule with a stage over its hard ``mem_capacity`` budget."""
+    problems = [f"hetero {p}" for p in check_results(results)]
+    if results.get("all_capacity_feasible", True) is not True:
+        problems.append(
+            "all_capacity_feasible: a respect/oracle schedule places more "
+            "parameter bytes on a stage than its mem_capacity budget")
     return problems

@@ -116,9 +116,13 @@ def run_scenario(
 ) -> dict:
     """Score one scenario; returns a JSON-able record (see module doc)."""
     oracle = oracle or ExactOracle()
-    system = PipelineSystem(n_stages=sc.n_stages)
     graphs = sc.build()
+    # uniform scenarios resolve to the stock scalar system; hetero/memcap
+    # scenarios carry per-stage cost vectors and (memcap) a hard
+    # per-stage parameter budget resolved against the graph pool
+    system = sc.resolve_system(graphs)
     k = sc.n_stages
+    track_capacity = system.has_capacity
     if keep_graph_records is None:
         # dnn: the Table-I per-model table; ingest: per-architecture gap
         # rows for BENCH_ingest.json and the full-grid report
@@ -142,6 +146,13 @@ def run_scenario(
 
     opts, is_refined, bb_improved = _refine_with_bb(
         graphs, dev, k, system, bb_max_n, bb_budget_s)
+    oracle_capacity_ok = True
+    if track_capacity:
+        # the exact reference must itself respect the hard budgets —
+        # a penalized (infeasible) oracle solution is a scenario bug
+        oracle_capacity_ok = all(
+            evaluate_schedule(g, o.assignment, system).capacity_ok
+            for g, o in zip(graphs, opts))
 
     # ---- policies ----------------------------------------------------- #
     policies: dict = {}
@@ -157,10 +168,12 @@ def run_scenario(
             _policy_assignments(name, sched, graphs, k, system)  # warm jit
         assigns, t_policy = _policy_assignments(name, sched, graphs, k, system)
         gaps, valid, matches, beats, below_opt = [], True, 0, 0, 0
+        cap_ok_count = 0
         for i, (g, a, opt) in enumerate(zip(graphs, assigns, opts)):
             ok = validate_monotone(g, a, k)
             valid &= ok
             ev = evaluate_schedule(g, a, system)
+            cap_ok_count += bool(ev.capacity_ok)
             gap = ev.bottleneck_s / opt.bottleneck_s - 1.0
             gaps.append(gap)
             if abs(gap) <= MATCH_RTOL:
@@ -195,6 +208,11 @@ def run_scenario(
             "_gaps": gaps,      # stripped by the report writer; used for
                                 # exact cross-scenario aggregation
         }
+        if track_capacity:
+            # capacity keys only where a budget exists, so uniform
+            # scenario records keep their exact pre-hetero shape
+            policies[name]["capacity_ok_rate"] = cap_ok_count / len(graphs)
+            policies[name]["all_capacity_ok"] = cap_ok_count == len(graphs)
 
     rec = {
         "name": sc.name,
@@ -211,6 +229,13 @@ def run_scenario(
         },
         "policies": policies,
     }
+    if not system.is_uniform:
+        rec["system"] = {
+            "heterogeneous": bool(system.has_stage_vectors),
+            "capacity_constrained": bool(system.has_capacity),
+        }
+        if track_capacity:
+            rec["oracle"]["capacity_ok"] = bool(oracle_capacity_ok)
     if keep_graph_records:
         rec["graphs"] = graph_records
     return rec
@@ -263,7 +288,7 @@ def run_grid(
 
     t_host = float(sum(r["oracle"]["t_host_s"] for r in recs))
     t_dev = float(sum(r["oracle"]["t_device_s"] for r in recs))
-    return {
+    out = {
         "scenarios": recs,
         "aggregate": aggregate,
         "oracle_parity": bool(all(r["oracle"]["parity"] for r in recs)),
@@ -275,3 +300,15 @@ def run_grid(
         "speedup_respect_vs_exact": t_host / max(
             aggregate["respect"]["t_s"], 1e-12),
     }
+    # hard flag over the capacity-constrained scenarios: the exact
+    # reference AND the production policy must only ever emit schedules
+    # inside the budgets.  The heuristic baselines are capacity-naive by
+    # design (their rate is reported per scenario, not guarded) — the
+    # paper's baselines don't see memory limits either.  Key present only
+    # when a memcap scenario ran, so the uniform grid payload is unchanged.
+    if any("capacity_ok" in r["oracle"] for r in recs):
+        out["all_capacity_feasible"] = bool(all(
+            r["oracle"].get("capacity_ok", True)
+            and r["policies"]["respect"].get("all_capacity_ok", True)
+            for r in recs))
+    return out

@@ -38,18 +38,22 @@ import dataclasses
 
 import numpy as np
 
+from ..core.costmodel import PipelineSystem
 from ..core.dnn_graphs import all_model_graphs
 from ..core.graph import CompGraph
 from ..core.sampler import sample_dag
 
 __all__ = [
     "SYNTH_FAMILIES",
+    "HETERO_FAMILIES",
     "INGEST_ARCHS",
     "INGEST_SEQ_LEN",
     "Scenario",
     "synthetic_dag",
     "layered_dag",
+    "hetero_system",
     "scenario_grid",
+    "hetero_grid",
     "table1_scenarios",
     "ingest_scenarios",
     "traffic_synthetic_pool",
@@ -57,6 +61,13 @@ __all__ = [
 ]
 
 SYNTH_FAMILIES = ("chain", "layered", "branchy")
+
+# graph pools for these families are a mixed draw over SYNTH_FAMILIES; what
+# varies is the SYSTEM: per-stage cost constants (hetero) and additionally a
+# hard per-stage parameter budget (memcap).  They live in their own grid
+# (:func:`hetero_grid`) so the uniform smoke aggregate — and the absolute
+# quality ratchets pinned against it — stays untouched.
+HETERO_FAMILIES = ("hetero", "memcap")
 
 # the ingest scenario pair: one attention architecture, one SSM — both
 # full configs sit far above the 8 MB stage SRAM, so pipelining (and
@@ -109,6 +120,29 @@ def synthetic_dag(family: str, rng: np.random.Generator, n: int) -> CompGraph:
     raise ValueError(f"unknown family {family!r}; one of {SYNTH_FAMILIES}")
 
 
+def hetero_system(n_stages: int, seed: int) -> PipelineSystem:
+    """A seeded heterogeneous Edge-TPU chain: per-stage ``compute_rate``,
+    ``link_bw`` and ``cache_bytes`` are the uniform defaults times an
+    independent ``2**U(-1, 1)`` multiplier (each stage between half and
+    double the stock constant — the mixed-SKU / shared-hub regime).
+    ``compute_eff`` stays scalar on purpose: only the ``rate * eff``
+    product matters to the cost model, and keeping one field scalar
+    exercises the mixed scalar/tuple system path end to end."""
+    rng = np.random.default_rng(seed)
+    base = PipelineSystem(n_stages=n_stages)
+
+    def jitter(scalar: float) -> tuple[float, ...]:
+        return tuple(float(scalar * 2.0 ** rng.uniform(-1.0, 1.0))
+                     for _ in range(n_stages))
+
+    return PipelineSystem(
+        n_stages=n_stages,
+        compute_rate=jitter(float(base.compute_rate)),
+        link_bw=jitter(float(base.link_bw)),
+        cache_bytes=jitter(float(base.cache_bytes)),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One cell of the eval grid: a seeded graph population × a stage
@@ -117,7 +151,7 @@ class Scenario:
 
     name: str
     family: str              # chain | layered | branchy | dnn | traffic
-    #                        # | ingest
+    #                        # | ingest | hetero | memcap
     n_stages: int
     sizes: tuple[int, ...] = ()
     graphs_per_size: int = 0
@@ -125,6 +159,10 @@ class Scenario:
     smoke: bool = False      # traffic/ingest family: pool / model config
     archs: tuple[str, ...] = ()   # ingest family: zoo architectures
     n_nodes: int = 0              # ingest family: coarsening budget
+    system: PipelineSystem | None = None  # hetero/memcap: per-stage profile
+    memcap_frac: float = 0.0      # memcap family: per-stage budget as a
+    #                             # fraction of the pool's largest total
+    #                             # param bytes (0 = unconstrained)
 
     def build(self) -> list[CompGraph]:
         if self.family == "dnn":
@@ -141,9 +179,48 @@ class Scenario:
                                  smoke=self.smoke,
                                  seq_len=INGEST_SEQ_LEN).graph
                     for a in self.archs]
+        if self.family in HETERO_FAMILIES:
+            # the hetero axis varies the SYSTEM, not the graphs: a mixed
+            # draw over all synthetic families keeps the pool comparable
+            # to the uniform grid's population
+            rng = np.random.default_rng(self.seed)
+            return [synthetic_dag(fam, rng, n)
+                    for fam in SYNTH_FAMILIES
+                    for n in self.sizes
+                    for _ in range(self.graphs_per_size)]
         rng = np.random.default_rng(self.seed)
         return [synthetic_dag(self.family, rng, n)
                 for n in self.sizes for _ in range(self.graphs_per_size)]
+
+    def resolve_system(self, graphs: list[CompGraph]) -> PipelineSystem:
+        """The :class:`PipelineSystem` this scenario scores under.
+
+        Uniform scenarios (``system is None``, no ``memcap_frac``) resolve
+        to the stock scalar system — exactly what the runner always built.
+        ``memcap_frac > 0`` stamps a seeded per-stage ``mem_capacity``
+        vector resolved against the graph POOL: the base budget is
+        ``max(frac * total_params, total_params / k + max_node_param,
+        1.3 * max_node_param)`` over all pool graphs, which guarantees a
+        capacity-feasible contiguous split exists for EVERY graph under
+        ANY node order (greedy filling to ``total/k`` overshoots by at
+        most one node), so the hard ``all_capacity_feasible`` flag is a
+        solver property, not a scenario lottery.  Per-stage multipliers
+        ``2**U(0, 0.5)`` sit on top (only >= 1, preserving the
+        guarantee)."""
+        system = ((self.system or PipelineSystem(n_stages=self.n_stages))
+                  .with_stages(self.n_stages))
+        if self.memcap_frac <= 0.0:
+            return system
+        k = self.n_stages
+        total = max(float(g.param_bytes.sum()) for g in graphs)
+        max_node = max(float(g.param_bytes.max()) for g in graphs)
+        base = max(self.memcap_frac * total,
+                   total / k + max_node,
+                   1.3 * max_node)
+        rng = np.random.default_rng(self.seed + 1)
+        caps = tuple(float(base * 2.0 ** rng.uniform(0.0, 0.5))
+                     for _ in range(k))
+        return dataclasses.replace(system, mem_capacity=caps)
 
 
 def table1_scenarios(stage_counts=(4, 5, 6)) -> list[Scenario]:
@@ -201,6 +278,39 @@ def scenario_grid(smoke: bool = False,
         # output.  The ingest surface has its own guarded artifact
         # (benchmarks/ingest_bench.py -> BENCH_ingest.json).
         out.extend(ingest_scenarios(smoke=False))
+    return out
+
+
+def hetero_grid(smoke: bool = False) -> list[Scenario]:
+    """The heterogeneous-system tier: per-stage cost profiles (``hetero``)
+    and hard per-stage memory budgets on top (``memcap``), over a mixed
+    synthetic pool.  A SEPARATE grid from :func:`scenario_grid` so the
+    uniform smoke aggregate — and the absolute ratchet floors CI pins
+    against it — is byte-identical to the pre-hetero artifact; the
+    report writer folds this tier in under ``hetero_*`` keys.
+    """
+    stage_counts = (2, 4) if smoke else (2, 4, 6, 8)
+    sizes = (6, 10, 14) if smoke else (5, 8, 12, 16, 20)
+    per_size = 2 if smoke else 3
+    out: list[Scenario] = []
+    for k in stage_counts:
+        out.append(Scenario(
+            name=f"hetero/k{k}", family="hetero", n_stages=k,
+            sizes=sizes, graphs_per_size=per_size,
+            seed=hash_seed("hetero", k),
+            system=hetero_system(k, seed=hash_seed("hetero-sys", k))))
+        out.append(Scenario(
+            name=f"memcap/k{k}", family="memcap", n_stages=k,
+            sizes=sizes, graphs_per_size=per_size,
+            seed=hash_seed("memcap", k),
+            system=hetero_system(k, seed=hash_seed("memcap-sys", k)),
+            memcap_frac=0.6))
+    # one capacity-only cell: uniform cost constants, hard budgets only —
+    # isolates the capacity machinery from the per-stage cost machinery
+    out.append(Scenario(
+        name="memcap/uniform_k4", family="memcap", n_stages=4,
+        sizes=sizes, graphs_per_size=per_size,
+        seed=hash_seed("memcap-uniform", 4), memcap_frac=0.5))
     return out
 
 

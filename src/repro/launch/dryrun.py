@@ -70,7 +70,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     record = {"arch": arch, "shape": shape_name,
               "mesh": "multi" if multi_pod else "single", "chips": chips}
 
-    t0 = time.time()
+    # perf_counter, not time.time(): wall-clock steps (NTP slew) can make
+    # the reported lower/compile splits negative or skewed, and these flow
+    # into checked-in bench artifacts.
+    t0 = time.perf_counter()
     with set_mesh(mesh):
         if shape.kind == "train":
             tcfg = train_config(arch)
@@ -92,10 +95,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
             klen = jax.ShapeDtypeStruct((), jnp.int32)
             lowered = jfn.lower(p_shapes, tok, c_shapes, klen)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
 
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     record["memory"] = {

@@ -1,0 +1,360 @@
+"""Heterogeneous-system and memory-capacity solver invariants.
+
+Differential fuzz for PR-10's generalized :class:`PipelineSystem`:
+
+* host ``exact_dp`` vs the exhaustive contiguous enumerator on per-stage
+  cost vectors, with and without hard ``mem_capacity`` budgets;
+* device ``rho_dp_jax``/``exact_dp_jax`` vs the host DP, bit-identical
+  assignments over >= 300 random (DAG, profile) pairs (padded shapes
+  included, so the serving bucket path is what's exercised);
+* scalar back-compat: a tuple-of-equal-scalars system is BITWISE the
+  scalar system end to end (assignments, objectives, profile features);
+* capacity-aware repair host/device parity, and the end-to-end
+  guarantee that solver output never violates a stage budget the
+  scenario construction makes satisfiable.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PipelineSystem, brute_force_monotone, evaluate_schedule, exact_bb,
+    exact_dp, repair, sample_dag, validate_monotone,
+)
+from repro.core.costmodel import CAPACITY_PENALTY_S, SYS_FEAT_DIM
+from repro.core.exact import brute_force_contiguous
+from repro.core.segment import repair_jax, rho_dp_jax
+from repro.eval.scenarios import (
+    HETERO_FAMILIES, Scenario, hetero_grid, hetero_system, synthetic_dag,
+)
+
+MAX_DEG = 6
+PAD_N = 16          # fixed device shape: every fuzz graph padded up to this
+
+
+def _rand_system(k: int, seed: int) -> PipelineSystem:
+    return hetero_system(k, seed)
+
+
+def _feasible_caps(g, k: int, seed: int) -> tuple[float, ...]:
+    """Per-stage budgets with margin: base = total/k + max_node (a
+    capacity-feasible contiguous split of ANY order always exists), times
+    seeded multipliers >= 1.  Margin keeps host-f64 vs device-f32
+    comparisons away from razor-edge equality."""
+    total = float(g.param_bytes.sum())
+    mx = float(g.param_bytes.max())
+    base = max(total / k + mx, 1.3 * mx, 1.0)
+    rng = np.random.default_rng(seed)
+    return tuple(float(base * 2.0 ** rng.uniform(0.05, 0.5))
+                 for _ in range(k))
+
+
+def _pad(g):
+    fl = np.zeros(PAD_N, np.float32)
+    pb = np.zeros(PAD_N, np.float32)
+    ob = np.zeros(PAD_N, np.float32)
+    pm = np.full((PAD_N, MAX_DEG), -1, np.int32)
+    fl[: g.n] = g.flops
+    pb[: g.n] = g.param_bytes
+    ob[: g.n] = g.out_bytes
+    pm[: g.n] = g.parent_matrix(MAX_DEG)
+    return fl, pb, ob, pm
+
+
+@functools.lru_cache(maxsize=64)
+def _dp_fn(k: int, system: PipelineSystem):
+    return jax.jit(lambda o, fl, pb, ob, pm, nv: rho_dp_jax(
+        o, fl, pb, ob, pm, k, system, n_valid=nv))
+
+
+# --------------------------------------------------------------------- #
+# host DP vs exhaustive contiguous enumeration
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_exact_dp_matches_brute_force_hetero(k):
+    for trial in range(20):
+        rng = np.random.default_rng(1000 * k + trial)
+        n = int(rng.integers(5, 11))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        sys_ = _rand_system(k, seed=77 * k + trial)
+        a_dp, b_dp = exact_dp(g, k, sys_)
+        a_bf, b_bf, _ = brute_force_contiguous(g, k, sys_)
+        assert b_dp == pytest.approx(b_bf, rel=1e-9)
+        assert np.array_equal(a_dp, a_bf), (
+            f"trial {trial}: DP split diverged from the exhaustive "
+            f"contiguous optimum (k={k}, n={n})")
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_exact_dp_matches_brute_force_capacity(k):
+    for trial in range(15):
+        rng = np.random.default_rng(2000 * k + trial)
+        n = int(rng.integers(5, 11))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        base = _rand_system(k, seed=88 * k + trial)
+        sys_ = PipelineSystem(
+            n_stages=k, compute_rate=base.compute_rate,
+            link_bw=base.link_bw, cache_bytes=base.cache_bytes,
+            mem_capacity=_feasible_caps(g, k, seed=trial))
+        a_dp, b_dp = exact_dp(g, k, sys_)
+        a_bf, b_bf, _ = brute_force_contiguous(g, k, sys_)
+        assert b_dp == pytest.approx(b_bf, rel=1e-9)
+        assert np.array_equal(a_dp, a_bf)
+        # the budget construction guarantees a feasible split exists, so
+        # the penalized DP must find one
+        assert b_dp < CAPACITY_PENALTY_S
+        assert evaluate_schedule(g, a_dp, sys_).capacity_ok
+
+
+def test_exact_dp_infeasible_capacity_reports_penalty():
+    """When NO contiguous split fits the budgets the DP still returns a
+    well-formed (least-violating) split and signals via the objective."""
+    rng = np.random.default_rng(7)
+    g = sample_dag(rng, n=8, deg=2)
+    caps = tuple([float(g.param_bytes.max()) * 0.5] * 3)   # nothing fits
+    sys_ = PipelineSystem(n_stages=3, mem_capacity=caps)
+    assign, b = exact_dp(g, 3, sys_)
+    assert validate_monotone(g, assign, 3)
+    assert b >= CAPACITY_PENALTY_S
+    assert not evaluate_schedule(g, assign, sys_).capacity_ok
+
+
+# --------------------------------------------------------------------- #
+# scalar back-compat: tuple-of-equal-scalars == scalar, bitwise
+# --------------------------------------------------------------------- #
+def test_tuple_of_equal_scalars_is_bitwise_scalar():
+    for trial in range(20):
+        rng = np.random.default_rng(300 + trial)
+        n = int(rng.integers(5, 20))
+        k = int(rng.integers(2, 6))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        scalar = PipelineSystem(n_stages=k)
+        vec = PipelineSystem(
+            n_stages=k,
+            compute_rate=(float(scalar.compute_rate),) * k,
+            compute_eff=(float(scalar.compute_eff),) * k,
+            link_bw=(float(scalar.link_bw),) * k,
+            cache_bytes=(float(scalar.cache_bytes),) * k)
+        a_s, b_s = exact_dp(g, k, scalar)
+        a_v, b_v = exact_dp(g, k, vec)
+        assert np.array_equal(a_s, a_v)
+        assert b_s == b_v                       # exact float equality
+        ev_s = evaluate_schedule(g, a_s, scalar)
+        ev_v = evaluate_schedule(g, a_v, vec)
+        assert ev_s.bottleneck_s == ev_v.bottleneck_s
+        assert ev_s.latency_s == ev_v.latency_s
+        assert np.array_equal(ev_s.stage_times, ev_v.stage_times)
+
+
+def test_profile_features_contract():
+    scalar = PipelineSystem(n_stages=4)
+    assert scalar.is_uniform
+    assert not scalar.profile_features().any()
+    # equal-valued tuples: not "uniform" by type, but feature-zero — the
+    # policy stays unconditioned and kernel decode stays eligible
+    eq = PipelineSystem(n_stages=4, link_bw=(320e6,) * 4)
+    assert not eq.is_uniform
+    assert not eq.profile_features().any()
+    het = hetero_system(4, seed=3)
+    f = het.profile_features()
+    assert f.shape == (SYS_FEAT_DIM,) and f.dtype == np.float32
+    assert f.any() and np.all(np.isfinite(f))
+    assert f[9] == 0.0                          # no capacity flag
+    cap = PipelineSystem(n_stages=4, mem_capacity=1e8)
+    fc = cap.profile_features()
+    assert fc[9] == 1.0                         # capacity flag set
+
+
+# --------------------------------------------------------------------- #
+# device DP vs host DP: >= 300 random (DAG, profile) pairs
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("k", [2, 4])
+def test_device_dp_matches_host_300_pairs(k):
+    """Bit-identical assignments, padded device shapes, 6 seeded profiles
+    x 25 graphs x 2 stage counts = 300 (DAG, profile) pairs."""
+    mismatches = 0
+    for sys_seed in range(6):
+        sys_ = _rand_system(k, seed=5000 + 10 * sys_seed + k)
+        fn = _dp_fn(k, sys_)
+        order = jnp.arange(PAD_N, dtype=jnp.int32)
+        for trial in range(25):
+            rng = np.random.default_rng(9000 + 100 * sys_seed + trial)
+            fam = ("chain", "layered", "branchy")[trial % 3]
+            n = int(rng.integers(5, PAD_N + 1))
+            g = synthetic_dag(fam, rng, n)
+            fl, pb, ob, pm = _pad(g)
+            a_dev, _ = fn(order, jnp.asarray(fl), jnp.asarray(pb),
+                          jnp.asarray(ob), jnp.asarray(pm),
+                          jnp.int32(g.n))
+            a_host, _ = exact_dp(g, k, sys_)
+            if not np.array_equal(np.asarray(a_dev)[: g.n], a_host):
+                mismatches += 1
+    assert mismatches == 0
+
+
+def test_device_dp_matches_host_capacity():
+    """Capacity-penalized device DP vs host, per-graph budgets (each a
+    distinct compiled program, so fewer trials than the padded sweep)."""
+    for trial in range(10):
+        rng = np.random.default_rng(4000 + trial)
+        k = int(rng.integers(2, 5))
+        n = int(rng.integers(6, 13))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        base = _rand_system(k, seed=600 + trial)
+        sys_ = PipelineSystem(
+            n_stages=k, compute_rate=base.compute_rate,
+            link_bw=base.link_bw, cache_bytes=base.cache_bytes,
+            mem_capacity=_feasible_caps(g, k, seed=trial))
+        a_host, _ = exact_dp(g, k, sys_)
+        a_dev, _ = rho_dp_jax(
+            jnp.arange(g.n, dtype=jnp.int32),
+            jnp.asarray(g.flops, jnp.float32),
+            jnp.asarray(g.param_bytes, jnp.float32),
+            jnp.asarray(g.out_bytes, jnp.float32),
+            jnp.asarray(g.parent_matrix(MAX_DEG)),
+            k, sys_)
+        assert np.array_equal(np.asarray(a_dev), a_host)
+        assert evaluate_schedule(g, a_host, sys_).capacity_ok
+
+
+# --------------------------------------------------------------------- #
+# capacity-aware repair: host/device parity + feasibility preservation
+# --------------------------------------------------------------------- #
+def test_capacity_repair_host_device_parity():
+    for trial in range(15):
+        rng = np.random.default_rng(500 + trial)
+        k = int(rng.integers(2, 5))
+        n = int(rng.integers(6, 14))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        caps = np.asarray(_feasible_caps(g, k, seed=trial))
+        assign = rng.integers(0, k, size=n)
+        host = repair(g, assign, k, mem_capacity=caps)
+        md = max(1, max((len(p) for p in g.parents), default=1),
+                 max((len(c) for c in g.children), default=1))
+        dev = repair_jax(
+            jnp.asarray(g.parent_matrix(md)),
+            jnp.asarray(g.child_matrix(md)),
+            jnp.asarray(g.ancestor_matrix()),
+            jnp.asarray(assign.astype(np.int32)), k,
+            param_bytes=jnp.asarray(g.param_bytes, jnp.float32),
+            mem_capacity=caps)
+        assert np.array_equal(np.asarray(dev), host)
+        assert validate_monotone(g, host, k)
+
+
+def test_repair_preserves_capacity_feasibility():
+    """On a capacity-feasible input (what the penalized DP emits when a
+    feasible split exists), repair must never move mass over a budget."""
+    for trial in range(15):
+        rng = np.random.default_rng(800 + trial)
+        k = int(rng.integers(2, 5))
+        n = int(rng.integers(6, 14))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        caps = np.asarray(_feasible_caps(g, k, seed=trial))
+        sys_ = PipelineSystem(n_stages=k, mem_capacity=tuple(caps))
+        a_dp, b = exact_dp(g, k, sys_)
+        assert b < CAPACITY_PENALTY_S
+        fixed = repair(g, a_dp, k, mem_capacity=caps)
+        assert validate_monotone(g, fixed, k)
+        assert evaluate_schedule(g, fixed, sys_).capacity_ok
+
+
+# --------------------------------------------------------------------- #
+# bb / brute force on hetero + capacity systems
+# --------------------------------------------------------------------- #
+def test_bb_matches_brute_force_hetero_capacity():
+    for trial in range(8):
+        rng = np.random.default_rng(1500 + trial)
+        k = int(rng.integers(2, 4))
+        n = int(rng.integers(5, 9))
+        g = sample_dag(rng, n=n, deg=min(3, n - 2))
+        base = _rand_system(k, seed=160 + trial)
+        sys_ = PipelineSystem(
+            n_stages=k, compute_rate=base.compute_rate,
+            link_bw=base.link_bw, cache_bytes=base.cache_bytes,
+            mem_capacity=_feasible_caps(g, k, seed=trial))
+        _, b_bb = exact_bb(g, k, sys_, time_budget_s=5.0)
+        _, b_bf = brute_force_monotone(g, k, sys_)
+        assert b_bb == pytest.approx(b_bf, rel=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# scenario plumbing
+# --------------------------------------------------------------------- #
+def test_hetero_grid_scenarios_resolve():
+    grid = hetero_grid(smoke=True)
+    names = [s.name for s in grid]
+    assert any(n.startswith("hetero/") for n in names)
+    assert any(n.startswith("memcap/") for n in names)
+    for sc in grid:
+        assert sc.family in HETERO_FAMILIES
+        graphs = sc.build()
+        assert graphs and all(g.n >= 1 for g in graphs)
+        # deterministic build + resolve
+        assert all(np.array_equal(a.param_bytes, b.param_bytes)
+                   for a, b in zip(graphs, sc.build()))
+        sys_ = sc.resolve_system(graphs)
+        assert sys_.n_stages == sc.n_stages
+        assert sys_ == sc.resolve_system(graphs)
+        if sc.memcap_frac > 0:
+            cap = sys_.capacity_vector()
+            assert cap is not None and cap.shape == (sc.n_stages,)
+            # the construction guarantees every graph admits a feasible
+            # contiguous split: total/k + max_node <= min cap
+            for g in graphs:
+                total = float(g.param_bytes.sum())
+                mx = float(g.param_bytes.max())
+                assert cap.min() >= total / sc.n_stages + mx - 1e-6
+        else:
+            assert not sys_.has_capacity
+
+
+def test_hetero_grid_end_to_end_small():
+    """Tiny hetero + memcap cells through the full runner/report stack:
+    oracle parity must hold on per-stage systems, every respect/oracle
+    schedule must stay inside the budgets, and the hetero summary must
+    carry the flat guard keys CI pins."""
+    from repro.core.respect import RespectScheduler
+    from repro.eval.report import check_hetero, summarize_hetero
+    from repro.eval.runner import run_grid
+
+    scenarios = [
+        Scenario(name="hetero/k4", family="hetero", n_stages=4,
+                 sizes=(6, 8), graphs_per_size=1, seed=11,
+                 system=hetero_system(4, seed=21)),
+        Scenario(name="memcap/k2", family="memcap", n_stages=2,
+                 sizes=(6, 8), graphs_per_size=1, seed=12,
+                 system=hetero_system(2, seed=22), memcap_frac=0.6),
+    ]
+    sched = RespectScheduler.init(seed=0)
+    res = run_grid(scenarios, sched, bb_max_n=8, bb_budget_s=0.5)
+    assert res["oracle_parity"]
+    assert res["all_schedules_valid"]
+    assert res["all_capacity_feasible"]
+    by_name = {r["name"]: r for r in res["scenarios"]}
+    assert by_name["hetero/k4"]["system"] == {
+        "heterogeneous": True, "capacity_constrained": False}
+    mc = by_name["memcap/k2"]
+    assert mc["oracle"]["capacity_ok"] is True
+    assert mc["policies"]["respect"]["all_capacity_ok"] is True
+    assert 0.0 <= mc["policies"]["list"]["capacity_ok_rate"] <= 1.0
+    summ = summarize_hetero(res)
+    for key in ("hetero_oracle_parity", "hetero_all_valid",
+                "all_capacity_feasible", "hetero_match_rate_respect",
+                "hetero_gap_mean_respect", "hetero_gap_p95_respect"):
+        assert key in summ
+    assert check_hetero(res) == []
+    # the flag goes false when a schedule lands over budget
+    broken = {**res, "all_capacity_feasible": False}
+    assert any("all_capacity_feasible" in p for p in check_hetero(broken))
+
+
+def test_uniform_scenario_resolves_to_stock_system():
+    sc = Scenario(name="chain/k4", family="chain", n_stages=4,
+                  sizes=(6,), graphs_per_size=1, seed=1)
+    g = sc.build()
+    assert sc.resolve_system(g) == PipelineSystem(n_stages=4)

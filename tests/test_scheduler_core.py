@@ -109,6 +109,35 @@ def test_repair_pushes_forward_minimally():
     assert fixed[0] == 1 and fixed[1] == 2 and fixed[2] == 2
 
 
+@pytest.mark.parametrize("k", [4, 8])
+def test_heuristics_single_node_graph(k):
+    """n=1 at high stage counts: one node on stage 0, all later stages
+    empty — valid, and the only dependency-monotone option."""
+    g = CompGraph(parents=[[]], flops=[1e6], param_bytes=[1e3],
+                  out_bytes=[1e3])
+    for h in (compiler_partition(g, k), list_schedule(g, k)):
+        assert h.shape == (1,)
+        assert h[0] == 0
+        assert validate_monotone(g, h, k)
+
+
+@pytest.mark.parametrize("k", [4, 8])
+@pytest.mark.parametrize("n", [2, 3])
+def test_heuristics_fewer_nodes_than_stages(k, n):
+    """n < k: the p > 0 guard keeps stage 0 non-empty, trailing stages
+    simply stay empty; assignments must be in-range, dependency-monotone
+    and non-decreasing along the chain."""
+    parents = [[]] + [[v - 1] for v in range(1, n)]
+    g = CompGraph(parents=parents, flops=[1e6] * n,
+                  param_bytes=[1e3] * n, out_bytes=[1e3] * n)
+    for h in (compiler_partition(g, k), list_schedule(g, k)):
+        assert h.shape == (n,)
+        assert h.min() >= 0 and h.max() < k
+        assert h[0] == 0                      # stage 0 never stranded empty
+        assert np.all(np.diff(h) >= 0)        # chain order respected
+        assert validate_monotone(g, h, k)
+
+
 def test_evaluate_schedule_terms():
     g = CompGraph(parents=[[], [0]], flops=[1e9, 1e9],
                   param_bytes=[9 * 2**20, 0], out_bytes=[1e6, 1e6])

@@ -1,0 +1,44 @@
+"""Timing hygiene: every wall-clock split that flows into checked-in
+artifacts must come from a monotonic clock.
+
+``time.time()`` steps under NTP slew, which can make reported
+lower/compile splits negative or skew bench artifacts; the PR-10 bugfix
+moved ``launch/dryrun.py`` and ``benchmarks/run.py`` to
+``time.perf_counter()``.  Importing the dryrun module is too heavy for
+the fast tier (it locks the jax device count and pulls the model zoo),
+so this is a source-level regression guard pinning the fix.
+"""
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# modules whose timing deltas land in artifacts / printed summaries
+TIMED_SOURCES = [
+    REPO / "src" / "repro" / "launch" / "dryrun.py",
+    REPO / "src" / "repro" / "ingest" / "trace.py",
+    REPO / "src" / "repro" / "ingest" / "pipeline.py",
+    REPO / "benchmarks" / "run.py",
+]
+
+
+def test_no_wall_clock_in_timed_modules():
+    offenders = []
+    for path in TIMED_SOURCES:
+        for line in path.read_text().splitlines():
+            code = line.split("#", 1)[0]       # comments may cite the API
+            if re.search(r"\btime\.time\(\)", code):
+                offenders.append(str(path.relative_to(REPO)))
+                break
+    assert not offenders, (
+        f"time.time() in timing-critical modules {offenders}: use "
+        "time.perf_counter() so NTP slew cannot produce negative splits")
+
+
+def test_dryrun_uses_perf_counter():
+    src = (REPO / "src" / "repro" / "launch" / "dryrun.py").read_text()
+    assert "time.perf_counter()" in src
+    # the split derivation itself: monotone clock makes both non-negative
+    assert "t_lower = time.perf_counter() - t0" in src
+    assert "t_compile = time.perf_counter() - t0 - t_lower" in src
